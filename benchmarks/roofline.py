@@ -1,0 +1,106 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch x shape) on the single-pod mesh (256 chips), derive the three
+terms (seconds/step/device; artifacts carry PER-DEVICE numbers from the
+partitioned HLO, so "X_total/(chips*rate)" algebraically equals
+"X_per_device/rate"):
+
+  compute    = HLO_FLOPs_dev / 197e12      (v5e bf16 peak per chip)
+  memory     = HLO_bytes_dev / 819e9       (HBM bandwidth)
+  collective = coll_bytes_dev / 50e9       (ICI per-link)
+
+Also: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (serve) from
+launch/specs.py meta, the MODEL/HLO usefulness ratio, the dominant term,
+and a one-line improvement note. Output: markdown table (stdout) + the
+machine-readable experiments/roofline.json.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline.json"
+
+NOTES = {
+    "compute": "raise MXU utilization: larger per-device tiles, fuse "
+               "pointwise ops, drop fp32 logits",
+    "memory": "cut HBM traffic: flash/chunked attention, masked-position "
+              "loss, bf16 intermediates, better remat policy",
+    "collective": "reshard to kill resharding collectives: EP-aligned "
+                  "token layout, overlap all-to-all with expert GEMMs",
+}
+
+
+def analyze(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        ce = r.get("cost_extrapolated") or {}
+        if "flops" not in ce:
+            ce = {"flops": r["cost_analysis"].get("flops", 0.0),
+                  "bytes": r["cost_analysis"].get("bytes accessed", 0.0),
+                  "coll_bytes": r["collectives"]["total_bytes"],
+                  "method": "raw"}
+        t_c = ce["flops"] / PEAK_FLOPS
+        t_m = ce["bytes"] / HBM_BW
+        t_x = ce["coll_bytes"] / LINK_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        bound = max(t_c, t_m, t_x)
+        mf_dev = r["meta"]["model_flops"] / r["devices"]
+        useful = mf_dev / ce["flops"] if ce["flops"] else 0.0
+        # roofline fraction: useful model flops per second at the bound,
+        # relative to peak — the score §Perf iterates on.
+        frac = (mf_dev / bound) / PEAK_FLOPS if bound > 0 else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+            "mesh": mesh,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "model_flops_dev": mf_dev,
+            "hlo_flops_dev": ce["flops"],
+            "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "temp_bytes_dev": r["memory_analysis"]["temp_bytes"],
+            "note": NOTES[dom],
+            "method": ce.get("method", "?"),
+        })
+    return rows
+
+
+def render(rows) -> str:
+    hdr = ("| arch | shape | dom | compute s | memory s | coll s | "
+           "MODEL/HLO | roofline frac | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant'][:4]} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['temp_bytes_dev']/2**30:.1f} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = analyze()
+    OUT.write_text(json.dumps(rows, indent=1))
+    print(render(rows))
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']:24s} {r['shape']:14s} frac={r['roofline_fraction']:.4f} dom={r['dominant']}")
+    collb = sorted(rows, key=lambda r: -r["t_collective_s"])[:5]
+    print("most collective-bound:")
+    for r in collb:
+        print(f"  {r['arch']:24s} {r['shape']:14s} t_coll={r['t_collective_s']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  [qps_recall]  paper Fig. 6 / Table 4 — QPS-recall curves, 4 datasets,
+                4 build variants (baselines implemented in-framework)
+  [ablation]    paper Fig. 7 — Base -> +Index -> +EarlyTerm -> +SIMD ->
+                +Prefetch
+  [scaling]     paper §5.2 — corpus-size sweep + sharded search
+  [roofline]    beyond-paper — per (arch x shape) roofline terms from the
+                dry-run artifacts (requires launch/dryrun.py artifacts)
+
+Each section prints `name,us_per_call,derived` style CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--sections", type=str, default="all")
+    args, _ = ap.parse_known_args()
+    want = (args.sections.split(",") if args.sections != "all"
+            else ["qps_recall", "ablation", "scaling", "roofline"])
+
+    failures = []
+    for name in want:
+        print(f"\n{'='*72}\n[{name}]\n{'='*72}")
+        t0 = time.time()
+        try:
+            if name == "qps_recall":
+                from benchmarks import qps_recall
+                qps_recall.main(quick=args.quick)
+            elif name == "ablation":
+                from benchmarks import ablation
+                ablation.main(quick=args.quick)
+            elif name == "scaling":
+                from benchmarks import scaling
+                scaling.main(quick=args.quick)
+            elif name == "roofline":
+                from benchmarks import roofline
+                roofline.main()
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nBENCH FAILURES:", failures)
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

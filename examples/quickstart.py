@@ -1,0 +1,44 @@
+"""Quickstart: build a KBest index, search it, save/load.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.index import KBest
+from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+from repro.data.vectors import make_dataset, recall_at_k
+
+
+def main():
+    # 1. data: a synthetic SIFT-like corpus (see repro/data/vectors.py)
+    ds = make_dataset("bigann_like", n=3000, n_queries=50, k=10)
+
+    # 2. parameter preparation (paper Table 2: KBest(config))
+    config = IndexConfig(
+        dim=ds.base.shape[1],
+        metric="l2",
+        build=BuildConfig(M=32, knn_k=48, select_rule="alpha", alpha=1.2,
+                          refine_iters=1, reorder="mst"),
+        search=SearchConfig(L=192, k=10, early_term=True, et_patience=48),
+    )
+
+    # 3. index construction (paper: Add(n, x))
+    index = KBest(config).add(ds.base)
+
+    # 4. query processing (paper: Search(nq, q, k, nt))
+    dists, ids, stats = index.search(ds.queries, k=10, with_stats=True)
+    rec = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    print(f"recall@10          = {rec:.3f}")
+    print(f"hops/query         = {float(np.asarray(stats.n_hops).mean()):.1f}")
+    print(f"dists/query        = {float(np.asarray(stats.n_dist).mean()):.0f}")
+    print(f"early-term rate    = {float(np.asarray(stats.early_terminated).mean()):.2f}")
+
+    # 5. persistence
+    index.save("/tmp/kbest_quickstart.npz")
+    index2 = KBest.load("/tmp/kbest_quickstart.npz")
+    d2, i2 = index2.search(ds.queries[:5], k=10)
+    print("reloaded index answers:", np.asarray(i2)[0][:5], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""The paper's own system configs: recommended KBest index parameters per
+evaluation dataset (paper Table 3/4), exposed like the arch configs.
+
+    from repro.configs import kbest
+    cfg = kbest.index_config("bigann_like")
+"""
+from repro.core.types import BuildConfig, IndexConfig, QuantConfig, SearchConfig
+
+ARCH_ID = "kbest"
+FAMILY = "anns"
+SHAPES = ("glove_like", "deep_like", "t2i_like", "bigann_like")
+
+# (dim, metric, build, search) tuned on the synthetic analogues to reach
+# recall@10 >= 0.95 (benchmarks/qps_recall.py)
+_CONFIGS = {
+    "glove_like": dict(
+        dim=100, metric="ip",
+        build=BuildConfig(M=32, knn_k=48, select_rule="alpha", alpha=1.2,
+                          search_passes=2, refine_iters=2, refine_cands=96,
+                          reorder="mst"),
+        search=SearchConfig(L=128, k=10, early_term=True, et_patience=32)),
+    "deep_like": dict(
+        dim=96, metric="ip",
+        build=BuildConfig(M=24, knn_k=32, select_rule="alpha", alpha=1.2,
+                          search_passes=1, refine_iters=1, refine_cands=64,
+                          reorder="mst"),
+        search=SearchConfig(L=64, k=10, early_term=True, et_patience=16)),
+    "t2i_like": dict(
+        dim=200, metric="ip",
+        build=BuildConfig(M=32, knn_k=48, select_rule="alpha", alpha=1.2,
+                          search_passes=2, refine_iters=1, refine_cands=96,
+                          reorder="mst"),
+        search=SearchConfig(L=128, k=10, early_term=True, et_patience=32)),
+    "bigann_like": dict(
+        dim=128, metric="l2",
+        build=BuildConfig(M=32, knn_k=48, select_rule="alpha", alpha=1.2,
+                          search_passes=2, refine_iters=1, refine_cands=96,
+                          reorder="mst"),
+        search=SearchConfig(L=192, k=10, early_term=True, et_patience=48)),
+}
+
+
+def index_config(dataset: str) -> IndexConfig:
+    return IndexConfig(**_CONFIGS[dataset])
+
+
+def full_config(dataset: str = "bigann_like") -> IndexConfig:
+    return index_config(dataset)
+
+
+def smoke_config() -> IndexConfig:
+    return IndexConfig(
+        dim=32, metric="l2",
+        build=BuildConfig(M=8, knn_k=12, refine_iters=1, refine_cands=24,
+                          reorder="mst"),
+        search=SearchConfig(L=16, k=5))

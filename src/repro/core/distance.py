@@ -1,0 +1,51 @@
+"""Reference distance functions (pure jnp).
+
+These are the semantic oracles; the Pallas kernels in repro.kernels must
+match them bit-for-tolerance. All distances are "smaller is more similar":
+  l2     : squared Euclidean ||q - x||^2
+  ip     : negative inner product  -<q, x>
+  cosine : negative cosine similarity; callers normalize x at add() time so
+           this reduces to ip on unit vectors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import METRICS
+
+
+def normalize(x: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(n, eps)
+
+
+def pairwise(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Full (nq, nx) distance matrix. q: (nq, d), x: (nx, d)."""
+    assert metric in METRICS
+    if metric == "l2":
+        # ||q||^2 + ||x||^2 - 2 q.x — one GEMM + rank-1 corrections; this is
+        # the Q-to-B decomposition the batch_dist kernel implements on MXU.
+        qq = jnp.sum(q * q, axis=-1, keepdims=True)
+        xx = jnp.sum(x * x, axis=-1)[None, :]
+        qx = q @ x.T
+        return jnp.maximum(qq + xx - 2.0 * qx, 0.0)
+    # ip / cosine (pre-normalized)
+    return -(q @ x.T)
+
+
+def one_to_many(q: jnp.ndarray, xs: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Distances from one query (d,) to a batch (B, d) — the paper's 1-to-B."""
+    assert metric in METRICS
+    if metric == "l2":
+        diff = xs - q[None, :]
+        return jnp.sum(diff * diff, axis=-1)
+    return -(xs @ q)
+
+
+def batched_one_to_many(q: jnp.ndarray, xs: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(Q, d) queries vs per-query neighbor batches (Q, B, d) -> (Q, B)."""
+    assert metric in METRICS
+    if metric == "l2":
+        diff = xs - q[:, None, :]
+        return jnp.sum(diff * diff, axis=-1)
+    return -jnp.einsum("qbd,qd->qb", xs, q)

@@ -1,0 +1,90 @@
+"""Distributed vector search over a device mesh (DESIGN.md §2, last row).
+
+The paper's KBest is single-node; at pod scale the standard architecture
+(the one Milvus deploys KBest into) is shard-per-device + merge:
+
+  * the database rows AND the per-shard proximity graph are sharded over
+    every mesh axis (a flat "shards" view of the mesh);
+  * each device runs the full KBest traversal on its local shard;
+  * per-shard top-k results are all-gathered and reduced to a global top-k.
+
+Graphs are built per shard (local ids), so no cross-device edges exist:
+search is embarrassingly parallel until the final O(P·k) merge. Recall of a
+sharded index is >= the single-shard index at equal per-shard L because each
+shard runs its own full traversal (more total distance evaluations); the
+QPS/recall trade is measured in benchmarks/scaling.py.
+
+Implementation is `jax.shard_map` so the same code path lowers for the
+(16, 16) single-pod and (2, 16, 16) multi-pod production meshes in the
+dry-run, and runs on the 1-device CPU mesh in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import search as search_mod
+from repro.core.types import SearchConfig
+
+
+def mesh_size(mesh: Mesh) -> int:
+    out = 1
+    for a in mesh.axis_names:
+        out *= mesh.shape[a]
+    return out
+
+
+def build_sharded_search(mesh: Mesh, cfg: SearchConfig, metric: str,
+                         n_local: int):
+    """Returns a jit'd fn(db, graph, entries, queries) -> (dists, ids).
+
+    db:      (P*n_local, d) row-sharded over the flattened mesh
+    graph:   (P*n_local, M) sharded likewise, *local* ids in [0, n_local)
+    entries: (P,) i32 per-shard entry points (local ids)
+    queries: (Q, d) replicated
+    Output:  (Q, k) replicated global top-k; ids are GLOBAL row ids.
+    """
+    axes = tuple(mesh.axis_names)
+    row_spec = P(axes)           # dim0 sharded over every axis, flattened
+    rep = P()
+    p_tot = mesh_size(mesh)
+
+    def local_search(db_l, graph_l, entry_l, queries):
+        dist_fn = search_mod.make_dist_fn(db_l, metric, cfg.dist_impl)
+        dists, ids, _ = search_mod.search(
+            graph_l, queries, entry_l, dist_fn=dist_fn, cfg=cfg,
+            n_total=n_local)
+        # translate local -> global ids using this device's linear index
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        gids = jnp.where(ids >= 0, ids + idx * n_local, -1)
+        # gather every shard's candidates and reduce to a global top-k
+        all_d = jax.lax.all_gather(dists, axes)   # (P, Q, k)
+        all_i = jax.lax.all_gather(gids, axes)
+        Q, k = dists.shape
+        all_d = all_d.reshape(p_tot, Q, k).transpose(1, 0, 2).reshape(Q, p_tot * k)
+        all_i = all_i.reshape(p_tot, Q, k).transpose(1, 0, 2).reshape(Q, p_tot * k)
+        neg, pos = jax.lax.top_k(-all_d, k)
+        return -neg, jnp.take_along_axis(all_i, pos, axis=1)
+
+    fn = jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(row_spec, row_spec, row_spec, rep),
+        out_specs=(rep, rep),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_sharded_arrays(mesh: Mesh, db, graph, entries, queries):
+    """device_put with the canonical shardings used by build_sharded_search."""
+    axes = tuple(mesh.axis_names)
+    row = NamedSharding(mesh, P(axes))
+    rep = NamedSharding(mesh, P())
+    return (jax.device_put(db, row), jax.device_put(graph, row),
+            jax.device_put(entries, row), jax.device_put(queries, rep))

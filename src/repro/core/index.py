@@ -1,0 +1,250 @@
+"""KBestIndex — the user-facing API (paper §4, Table 2).
+
+    index = KBest(config)          # parameter preparation
+    index.add(x)                   # index construction (build pipeline)
+    d, i = index.search(q, k)      # query processing
+    index.save(path) / KBest.load(path)
+
+Build pipeline (DESIGN.md §3): kNN graph (brute / NN-descent) -> edge
+selection -> F rounds of 2-hop refinement (A1) -> reverse-edge fill ->
+graph reordering (A2) -> optional PQ/SQ training+encoding (A4) -> medoid
+entry point. Search runs the batched traversal of core.search with early
+termination (A3); quantized searches re-rank the top candidates with exact
+distances (standard ADC + re-rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build as build_mod
+from repro.core import quantize as qz
+from repro.core import reorder as reorder_mod
+from repro.core import search as search_mod
+from repro.core.distance import normalize, pairwise
+from repro.core.refine import refine_graph
+from repro.core.types import IndexConfig, SearchConfig
+
+
+class KBest:
+    def __init__(self, config: IndexConfig):
+        self.config = config
+        self.db: Optional[jnp.ndarray] = None        # (n, d) f32 (normalized if cosine)
+        self.graph: Optional[jnp.ndarray] = None     # (n, M) i32
+        self.entry: int = 0
+        self.order: Optional[np.ndarray] = None      # new->old id map
+        # quantization state
+        self.pq: Optional[qz.PQState] = None
+        self.pq_codes: Optional[jnp.ndarray] = None
+        self.sq: Optional[qz.SQState] = None
+        self.sq_codes: Optional[jnp.ndarray] = None
+        self._dist_fns = {}
+
+    # ------------------------------------------------------------------ add
+    def add(self, x: np.ndarray) -> "KBest":
+        cfg = self.config
+        b = cfg.build
+        x = jnp.asarray(x, dtype=jnp.float32)
+        assert x.ndim == 2 and x.shape[1] == cfg.dim, x.shape
+        if cfg.metric == "cosine":
+            x = normalize(x)
+        metric = "ip" if cfg.metric == "cosine" else cfg.metric
+
+        knn_ids, knn_dists = build_mod.build_knn(
+            x, b.knn_k, metric, builder=b.builder,
+            rounds=b.nn_descent_rounds, sample=b.nn_descent_sample, seed=b.seed)
+
+        entry = build_mod.medoid(x, metric)
+        graph = refine_graph(
+            x, knn_ids, knn_dists, M=b.M, rule=b.select_rule, metric=metric,
+            alpha=b.alpha, ssg_angle_deg=b.ssg_angle_deg,
+            iters=b.refine_iters, cand_cap=b.refine_cands,
+            entry=entry, search_L=b.search_L, search_passes=b.search_passes)
+
+        if b.reorder != "none":
+            weights = np.asarray(_edge_weights(x, graph, metric))
+            if b.reorder == "mst":
+                order = reorder_mod.mst_reorder(np.asarray(graph), weights, entry)
+            elif b.reorder == "cm":
+                order = reorder_mod.cuthill_mckee(np.asarray(graph), entry)
+            else:
+                raise ValueError(b.reorder)
+            db2, g2, new_of_old = reorder_mod.apply_order(
+                order, np.asarray(x), np.asarray(graph))
+            x, graph = jnp.asarray(db2), jnp.asarray(g2)
+            entry = int(new_of_old[entry])
+            self.order = order
+
+        self.db, self.graph, self.entry = x, jnp.asarray(graph), entry
+
+        q = cfg.quant
+        if q.kind == "pq":
+            self.pq = qz.pq_train(x, q)
+            self.pq_codes = qz.pq_encode(self.pq.codebooks, x)
+        elif q.kind == "sq":
+            self.sq = qz.sq_train(x)
+            self.sq_codes = qz.sq_encode(self.sq, x)
+        return self
+
+    # --------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: Optional[int] = None,
+               search_cfg: Optional[SearchConfig] = None,
+               with_stats: bool = False):
+        """Top-k search. queries: (Q, d). Returns (dists, ids[, stats])."""
+        assert self.db is not None, "call add() first"
+        cfg = self.config
+        scfg = search_cfg or cfg.search
+        if k is not None and k != scfg.k:
+            scfg = dataclasses.replace(scfg, k=k)
+        metric = "ip" if cfg.metric == "cosine" else cfg.metric
+
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        if cfg.metric == "cosine":
+            q = normalize(q)
+
+        n = self.db.shape[0]
+        entry_ids = self._entry_ids(scfg.n_entries, n)
+        quant = cfg.quant.kind
+
+        if quant == "pq":
+            tables = qz.pq_query_tables(self.pq.codebooks, q, metric)
+            dist_fn = self._get_dist_fn("pq", scfg.dist_impl)
+            dists, ids, stats = search_mod.search(
+                self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
+                n_total=n)
+            dists, ids = self._rerank(q, ids, metric, scfg.k, cfg.quant.rerank)
+        elif quant == "sq":
+            dist_fn = self._get_dist_fn("sq", scfg.dist_impl)
+            dists, ids, stats = search_mod.search(
+                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
+                n_total=n)
+            dists, ids = self._rerank(q, ids, metric, scfg.k, cfg.quant.rerank)
+        else:
+            dist_fn = self._get_dist_fn("full", scfg.dist_impl)
+            dists, ids, stats = search_mod.search(
+                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=scfg, n_total=n)
+
+        # translate internal (post-reorder) ids back to the user's add() ids
+        if self.order is not None:
+            order = jnp.asarray(self.order, dtype=jnp.int32)
+            ids = jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)
+
+        if with_stats:
+            return dists, ids, stats
+        return dists, ids
+
+    def _entry_ids(self, n_entries: int, n: int) -> jnp.ndarray:
+        """Medoid + deterministic strided seeds: cheap cluster coverage for
+        the lockstep search (the paper uses a random-or-fixed entry; multiple
+        entries are the batched equivalent of per-thread random entries)."""
+        e = max(1, min(n_entries, n))
+        extra = (self.entry + (jnp.arange(1, e, dtype=jnp.int32)
+                               * jnp.int32(max(1, n // e)))) % n
+        return jnp.concatenate([jnp.array([self.entry], jnp.int32), extra])
+
+    def _get_dist_fn(self, kind: str, impl: str):
+        key = (kind, impl)
+        if key not in self._dist_fns:
+            metric = "ip" if self.config.metric == "cosine" else self.config.metric
+            if kind == "full":
+                fn = search_mod.make_dist_fn(self.db, metric, impl)
+            elif kind == "pq":
+                fn = qz.pq_make_dist_fn(self.pq_codes, self.pq.m, impl)
+            elif kind == "sq":
+                fn = qz.sq_make_dist_fn(self.sq_codes, self.sq, metric)
+            else:
+                raise ValueError(kind)
+            self._dist_fns[key] = fn
+        return self._dist_fns[key]
+
+    def _rerank(self, q, ids, metric, k, rerank):
+        """Exact re-rank of the quantized search's top candidates."""
+        r = rerank if rerank > 0 else min(4 * k, ids.shape[1])
+        r = min(r, ids.shape[1])
+        cand = ids[:, :r]
+        vecs = self.db[jnp.maximum(cand, 0)]
+        from repro.core.distance import batched_one_to_many
+        d = batched_one_to_many(q, vecs, metric)
+        d = jnp.where(cand >= 0, d, jnp.inf)
+        neg, pos = jax.lax.top_k(-d, k)
+        return -neg, jnp.take_along_axis(cand, pos, axis=1)
+
+    # ------------------------------------------------------------ save/load
+    def save(self, path: str) -> None:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        arrs = {"db": np.asarray(self.db), "graph": np.asarray(self.graph)}
+        if self.order is not None:
+            arrs["order"] = np.asarray(self.order)
+        if self.pq is not None:
+            arrs["pq_codebooks"] = np.asarray(self.pq.codebooks)
+            arrs["pq_codes"] = np.asarray(self.pq_codes)
+        if self.sq is not None:
+            arrs["sq_scale"] = np.asarray(self.sq.scale)
+            arrs["sq_zero"] = np.asarray(self.sq.zero)
+            arrs["sq_codes"] = np.asarray(self.sq_codes)
+        np.savez_compressed(p, **arrs)
+        meta = {"entry": self.entry,
+                "config": _config_to_dict(self.config)}
+        p.with_suffix(".json").write_text(json.dumps(meta))
+
+    @classmethod
+    def load(cls, path: str) -> "KBest":
+        p = Path(path)
+        meta = json.loads(p.with_suffix(".json").read_text())
+        cfg = _config_from_dict(meta["config"])
+        idx = cls(cfg)
+        with np.load(p if p.suffix == ".npz" else str(p) + ".npz") as z:
+            idx.db = jnp.asarray(z["db"])
+            idx.graph = jnp.asarray(z["graph"])
+            if "pq_codebooks" in z:
+                books = jnp.asarray(z["pq_codebooks"])
+                idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
+                idx.pq_codes = jnp.asarray(z["pq_codes"])
+            if "sq_scale" in z:
+                idx.sq = qz.SQState(jnp.asarray(z["sq_scale"]),
+                                    jnp.asarray(z["sq_zero"]))
+                idx.sq_codes = jnp.asarray(z["sq_codes"])
+            if "order" in z:
+                idx.order = np.asarray(z["order"])
+        idx.entry = int(meta["entry"])
+        return idx
+
+
+def _widen(scfg: SearchConfig) -> SearchConfig:
+    """Quantized first-pass searches return their whole (wide) queue so the
+    exact re-rank has at least 4k candidates to work with."""
+    want = max(scfg.L, 4 * scfg.k)
+    return dataclasses.replace(scfg, L=want, k=want)
+
+
+def _edge_weights(db: jnp.ndarray, graph: jnp.ndarray, metric: str) -> jnp.ndarray:
+    from repro.core.refine import _chunk_dists
+    n = graph.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    out = []
+    for s in range(0, n, 1024):
+        e = min(s + 1024, n)
+        out.append(_chunk_dists(db, rows[s:e], graph[s:e], metric))
+    w = jnp.concatenate(out, axis=0)
+    return jnp.where(jnp.isfinite(w), w, 0.0)
+
+
+def _config_to_dict(cfg: IndexConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def _config_from_dict(d: dict) -> IndexConfig:
+    from repro.core.types import BuildConfig, QuantConfig
+    return IndexConfig(
+        dim=d["dim"], metric=d["metric"],
+        build=BuildConfig(**d["build"]),
+        search=SearchConfig(**d["search"]),
+        quant=QuantConfig(**d["quant"]),
+    )

@@ -1,0 +1,170 @@
+"""Vector quantization (paper §3.2, A4): PQ and SQ as pluggable modules.
+
+The paper exposes quantization behind a standalone interface so algorithms
+can be swapped without touching the search core; we mirror that:
+
+  Quantizer.train(db)      -> state (codebooks / scales)
+  Quantizer.encode(db)     -> codes
+  Quantizer.query_tables(q)-> per-query operand passed to search() as the
+                              "queries" array (the search loop is agnostic)
+  Quantizer.make_dist_fn() -> DistFn consuming (tables, nbr_ids)
+
+PQ distance is ADC (asymmetric distance computation): per query build an
+(m, 256) lookup table of subspace distances; a database code (m,) uint8 then
+costs m table reads. On TPU the LUT gather is computed either by
+take_along_axis (ref) or the pq_adc Pallas kernel via one-hot contraction on
+the MXU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import QuantConfig
+
+
+# --------------------------------------------------------------------------
+# k-means (shared by PQ training)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(x: jnp.ndarray, k: int, iters: int, seed: int = 0) -> jnp.ndarray:
+    """Lloyd's algorithm; returns (k, d) centroids. Empty clusters keep
+    their previous centroid (standard fix)."""
+    n, d = x.shape
+    key = jax.random.PRNGKey(seed)
+    init_idx = jax.random.choice(key, n, (k,), replace=n < k)
+    cents = x[init_idx]
+
+    def step(cents, _):
+        d2 = (jnp.sum(x * x, 1, keepdims=True) + jnp.sum(cents * cents, 1)[None]
+              - 2.0 * x @ cents.T)
+        assign = jnp.argmin(d2, axis=1)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), assign, num_segments=k)
+        new = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts[:, None], 1), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+# --------------------------------------------------------------------------
+# Product quantization
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PQState:
+    codebooks: jnp.ndarray  # (m, 256, ds)
+    m: int
+    ds: int
+
+
+def pq_train(db: jnp.ndarray, cfg: QuantConfig) -> PQState:
+    n, d = db.shape
+    m = cfg.pq_m
+    assert d % m == 0, f"dim {d} not divisible by pq_m {m}"
+    ds = d // m
+    subs = db.reshape(n, m, ds).transpose(1, 0, 2)  # (m, n, ds)
+    books = jnp.stack([
+        kmeans(subs[j], 256, cfg.kmeans_iters, seed=cfg.seed + j)
+        for j in range(m)
+    ])
+    return PQState(codebooks=books, m=m, ds=ds)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pq_encode(state_books: jnp.ndarray, db: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) -> (n, m) uint8 codes."""
+    m, K, ds = state_books.shape
+    n = db.shape[0]
+    subs = db.reshape(n, m, ds)
+    d2 = (jnp.sum(subs * subs, -1)[:, :, None]
+          + jnp.sum(state_books * state_books, -1)[None]
+          - 2.0 * jnp.einsum("nmd,mkd->nmk", subs, state_books))
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pq_query_tables(state_books: jnp.ndarray, queries: jnp.ndarray, metric: str
+                    ) -> jnp.ndarray:
+    """Per-query ADC lookup tables, flattened to (Q, m*256).
+
+    l2: LUT[j, c] = ||q_j - C[j, c]||^2  (sums to ||q - x_hat||^2)
+    ip: LUT[j, c] = -<q_j, C[j, c]>      (sums to -<q, x_hat>)
+    """
+    m, K, ds = state_books.shape
+    Q = queries.shape[0]
+    qs = queries.reshape(Q, m, ds)
+    if metric == "l2":
+        lut = (jnp.sum(qs * qs, -1)[:, :, None]
+               + jnp.sum(state_books * state_books, -1)[None]
+               - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, state_books))
+    else:
+        lut = -jnp.einsum("qmd,mkd->qmk", qs, state_books)
+    return lut.reshape(Q, m * K)
+
+
+def pq_make_dist_fn(codes: jnp.ndarray, m: int, impl: str = "ref"):
+    """DistFn over PQ codes. `tables` (the search "queries") is (Q, m*256)."""
+    K = 256
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def fn(tables, nbr_ids):
+            return kops.pq_adc(tables.reshape(tables.shape[0], m, K),
+                               codes, nbr_ids)
+        return fn
+
+    def fn(tables, nbr_ids):
+        Q, MB = tables.shape[0], nbr_ids.shape[1]
+        lut = tables.reshape(Q, m, K)
+        c = codes[jnp.maximum(nbr_ids, 0)]          # (Q, B, m) uint8
+        g = jnp.take_along_axis(
+            lut[:, None, :, :],                     # (Q, 1, m, K)
+            c[..., None].astype(jnp.int32),         # (Q, B, m, 1)
+            axis=-1)[..., 0]
+        return jnp.sum(g, axis=-1)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Scalar quantization (int8 per-dimension affine)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SQState:
+    scale: jnp.ndarray   # (d,)
+    zero: jnp.ndarray    # (d,)
+
+
+def sq_train(db: jnp.ndarray) -> SQState:
+    lo = jnp.min(db, axis=0)
+    hi = jnp.max(db, axis=0)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    return SQState(scale=scale, zero=lo)
+
+
+def sq_encode(state: SQState, db: jnp.ndarray) -> jnp.ndarray:
+    return _sq_encode(state.scale, state.zero, db)
+
+
+@jax.jit
+def _sq_encode(scale: jnp.ndarray, zero: jnp.ndarray, db: jnp.ndarray
+               ) -> jnp.ndarray:
+    q = jnp.round((db - zero[None]) / scale[None])
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def sq_make_dist_fn(codes: jnp.ndarray, state: SQState, metric: str):
+    """DistFn with on-the-fly dequantization (fused in the kernel path)."""
+    from repro.core.distance import batched_one_to_many
+
+    def fn(queries, nbr_ids):
+        c = codes[jnp.maximum(nbr_ids, 0)].astype(jnp.float32)
+        vecs = c * state.scale[None, None, :] + state.zero[None, None, :]
+        return batched_one_to_many(queries, vecs, metric)
+    return fn

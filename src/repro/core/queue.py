@@ -1,0 +1,101 @@
+"""Fixed-size sorted candidate queue (the priority queue of Algorithm 1).
+
+JAX needs static shapes, so the queue is a struct-of-arrays of length L kept
+sorted ascending by distance:
+
+  dists   f32 (L,)  +inf in empty slots
+  ids     i32 (L,)  -1   in empty slots
+  visited bool (L,) True in empty slots (so they are never expanded)
+
+`merge_insert` is the single batched operation the traversal needs: merge M
+candidate (dist, id) pairs into the queue, deduplicating against the queue
+and within the batch, and report the insertion rank of the best surviving
+new candidate — which is exactly the signal Eq. 3 (early termination) needs.
+
+Everything is written for a single query and lifted with jax.vmap by the
+search loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+class Queue(NamedTuple):
+    dists: jnp.ndarray    # (L,) f32, ascending
+    ids: jnp.ndarray      # (L,) i32
+    visited: jnp.ndarray  # (L,) bool
+
+
+def init_queue(L: int) -> Queue:
+    return Queue(
+        dists=jnp.full((L,), INF, dtype=jnp.float32),
+        ids=jnp.full((L,), -1, dtype=jnp.int32),
+        visited=jnp.ones((L,), dtype=bool),
+    )
+
+
+def _dedupe_new(q: Queue, new_dists: jnp.ndarray, new_ids: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Invalidate new entries that duplicate the queue or earlier new entries."""
+    in_queue = jnp.any(new_ids[:, None] == q.ids[None, :], axis=1)
+    # duplicate of an earlier element within the batch (strict lower triangle)
+    m = new_ids.shape[0]
+    dup_prior = jnp.any(
+        (new_ids[:, None] == new_ids[None, :]) & (jnp.arange(m)[None, :] < jnp.arange(m)[:, None]),
+        axis=1,
+    )
+    bad = in_queue | dup_prior | (new_ids < 0)
+    return jnp.where(bad, INF, new_dists), jnp.where(bad, -1, new_ids)
+
+
+def merge_insert(q: Queue, new_dists: jnp.ndarray, new_ids: jnp.ndarray
+                 ) -> Tuple[Queue, jnp.ndarray, jnp.ndarray]:
+    """Merge (new_dists, new_ids) into the queue.
+
+    Returns (queue', best_rank, n_inserted) where best_rank is the rank (0-
+    based position in the merged order) of the best *new* candidate, or L if
+    nothing was inserted — the Eq. 3 insertion position p for this step.
+    """
+    L = q.dists.shape[0]
+    nd, ni = _dedupe_new(q, new_dists, new_ids)
+
+    cat_d = jnp.concatenate([q.dists, nd])
+    cat_i = jnp.concatenate([q.ids, ni])
+    cat_v = jnp.concatenate([q.visited, jnp.zeros_like(ni, dtype=bool)])
+
+    # Stable ascending sort by distance; ties keep existing entries first so
+    # visited flags are preserved across no-op merges.
+    order = jnp.argsort(cat_d, stable=True)
+    sd, si, sv = cat_d[order], cat_i[order], cat_v[order]
+    out = Queue(dists=sd[:L], ids=si[:L], visited=sv[:L])
+
+    best_new = jnp.min(nd)
+    # rank of best new candidate = #entries strictly better + existing ties
+    # (stable sort places existing entries before new ones on ties).
+    better = jnp.sum(cat_d < best_new) + jnp.sum(q.dists == best_new)
+    best_rank = jnp.where(jnp.isinf(best_new), L, jnp.minimum(better, L)).astype(jnp.int32)
+    n_inserted = jnp.sum((nd < q.dists[L - 1]) & (ni >= 0)).astype(jnp.int32)
+    return out, best_rank, n_inserted
+
+
+def pick_unvisited(q: Queue) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Index of the closest unvisited entry and whether one exists."""
+    masked = jnp.where(q.visited, INF, q.dists)
+    idx = jnp.argmin(masked).astype(jnp.int32)
+    has = jnp.isfinite(masked[idx])
+    return idx, has
+
+
+def mark_visited(q: Queue, idx: jnp.ndarray, do: jnp.ndarray) -> Queue:
+    vis = q.visited.at[idx].set(jnp.where(do, True, q.visited[idx]))
+    return q._replace(visited=vis)
+
+
+def topk(q: Queue, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Final result extraction (queue is sorted): first k entries."""
+    return q.dists[:k], q.ids[:k]

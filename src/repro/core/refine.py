@@ -1,0 +1,343 @@
+"""Index refinement (paper §3.2, A1): edge selection + 2-hop iteration.
+
+Pipeline: kNN graph -> edge-selection rule -> F rounds of {expand candidates
+to 2-hop neighborhood, re-select}. Three selection rules, all expressed as
+one greedy sweep with a rule-specific acceptance predicate:
+
+  alpha (Vamana/NSG): accept c iff for every already-selected s,
+        d(node, c) < alpha * d(s, c)            (hnsw == alpha with a=1.0)
+  ssg:  accept c iff for every selected s, the angle at `node` between
+        (c - node) and (s - node) is >= theta.
+
+The greedy sweep is vectorized over all nodes simultaneously (node-lanes);
+per candidate step it needs d(c, s) for the <=M selected vectors, i.e. an
+(n, M, d) batched distance — again the paper's Q-to-B workload. All heavy
+steps are chunked over nodes to bound the gather footprint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import _merge_topk
+
+
+@functools.partial(jax.jit, static_argnames=("M", "rule", "metric"))
+def select_edges(db: jnp.ndarray, rows: jnp.ndarray, cand_ids: jnp.ndarray,
+                 cand_dists: jnp.ndarray, *, M: int, rule: str, metric: str,
+                 alpha: float = 1.2, cos_theta: float = 0.5) -> jnp.ndarray:
+    """Greedy rule-based pruning of sorted candidates to <=M edges per node.
+
+    rows: (nc,) node ids this chunk refines; cand_ids/cand_dists: (nc, C)
+    sorted ascending by distance, -1/inf padded. Returns (nc, M) int32.
+    """
+    nc, C = cand_ids.shape
+    node_vecs = db[rows]                            # (nc, d)
+
+    def step(j, state):
+        sel_ids, sel_cnt, sel_vecs = state          # (nc, M), (nc,), (nc, M, d)
+        cid = cand_ids[:, j]
+        cdist = cand_dists[:, j]
+        cvec = db[jnp.maximum(cid, 0)]              # (nc, d)
+
+        slot_mask = jnp.arange(M)[None, :] < sel_cnt[:, None]
+        if rule == "ssg":
+            u = cvec - node_vecs
+            v = sel_vecs - node_vecs[:, None, :]
+            num = jnp.einsum("nmd,nd->nm", v, u)
+            den = jnp.linalg.norm(v, axis=-1) * jnp.linalg.norm(u, axis=-1)[:, None]
+            cos = num / jnp.maximum(den, 1e-12)
+            violate = jnp.any(slot_mask & (cos > cos_theta), axis=1)
+        else:  # alpha / hnsw; diversity geometry in L2 of the raw vectors
+            diff = sel_vecs - cvec[:, None, :]
+            d_sc = jnp.sum(diff * diff, axis=-1)
+            d_pc = jnp.sum((cvec - node_vecs) ** 2, axis=-1)
+            violate = jnp.any(
+                slot_mask & (d_pc[:, None] >= (alpha * alpha) * d_sc), axis=1)
+
+        accept = (cid >= 0) & jnp.isfinite(cdist) & ~violate & (sel_cnt < M)
+        pos = jnp.minimum(sel_cnt, M - 1)
+        hit = accept[:, None] & (jnp.arange(M)[None, :] == pos[:, None])
+        sel_ids = jnp.where(hit, cid[:, None], sel_ids)
+        sel_vecs = jnp.where(hit[:, :, None], cvec[:, None, :], sel_vecs)
+        sel_cnt = sel_cnt + accept.astype(jnp.int32)
+        return sel_ids, sel_cnt, sel_vecs
+
+    init = (jnp.full((nc, M), -1, jnp.int32), jnp.zeros((nc,), jnp.int32),
+            jnp.zeros((nc, M, db.shape[1]), db.dtype))
+    sel_ids, sel_cnt, _ = jax.lax.fori_loop(0, C, step, init)
+    # guarantee out-degree >= 1 (keep the closest candidate)
+    empty = sel_cnt == 0
+    sel_ids = sel_ids.at[:, 0].set(jnp.where(empty, cand_ids[:, 0], sel_ids[:, 0]))
+    return sel_ids
+
+
+def _chunk_dists(db: jnp.ndarray, rows: jnp.ndarray, ids: jnp.ndarray,
+                 metric: str) -> jnp.ndarray:
+    """d(db[rows[i]], db[ids[i, j]]) with -1 masked to inf. (nc, C)."""
+    vecs = db[jnp.maximum(ids, 0)]
+    base = db[rows]
+    if metric == "l2":
+        diff = vecs - base[:, None, :]
+        out = jnp.sum(diff * diff, axis=-1)
+    else:
+        out = -jnp.einsum("ncd,nd->nc", vecs, base)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "metric"))
+def expand_two_hop(db: jnp.ndarray, graph: jnp.ndarray, rows: jnp.ndarray,
+                   *, C: int, metric: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidates = 1-hop ∪ 2-hop neighbors of `rows`, deduped, top-C."""
+    g1 = graph[rows]                                            # (nc, M)
+    n, M = graph.shape
+    g2 = jnp.where(g1[:, :, None] >= 0,
+                   graph[jnp.maximum(g1, 0)], -1).reshape(g1.shape[0], M * M)
+    cands = jnp.concatenate([g1, g2], axis=1)
+    cands = jnp.where(cands == rows[:, None], -1, cands)
+    dists = _chunk_dists(db, rows, cands, metric)
+    nc = cands.shape[0]
+    ids, dists = _merge_topk(cands, dists, jnp.full((nc, 1), -1, jnp.int32),
+                             jnp.full((nc, 1), jnp.inf, jnp.float32), C)
+    return ids, dists
+
+
+def _reverse_proposals(graph: np.ndarray, cap: int) -> np.ndarray:
+    """(n, cap) int32 of reverse-edge proposers per node (-1 padded)."""
+    n, M = graph.shape
+    out = np.full((n, cap), -1, dtype=np.int32)
+    cnt = np.zeros(n, dtype=np.int64)
+    us = np.repeat(np.arange(n, dtype=np.int32), M)
+    vs = graph.reshape(-1)
+    ok = vs >= 0
+    for u, v in zip(us[ok], vs[ok]):
+        c = cnt[v]
+        if c < cap:
+            out[v, c] = u
+            cnt[v] = c + 1
+    return out
+
+
+def reverse_merge_select(db: jnp.ndarray, graph: np.ndarray, *, M: int,
+                         rule: str, metric: str, alpha: float,
+                         cos_theta: float, node_chunk: int = 512,
+                         rev_cap: int = None) -> np.ndarray:
+    """Vamana-style reverse-edge pass WITH re-pruning.
+
+    Every edge u->v proposes v->u; instead of dropping proposals when v is
+    full (which starves hub nodes and leaves the graph fragmented), each
+    node re-runs the edge-selection rule over {current edges} ∪ {proposals}.
+    The diversity rule then trades near-duplicate intra-cluster edges for
+    long-range connectivity — this is what stitches cluster islands into one
+    searchable component.
+    """
+    n = graph.shape[0]
+    rev_cap = rev_cap or 2 * M
+    rev = _reverse_proposals(np.asarray(graph), rev_cap)
+    g = jnp.asarray(graph)
+    rv = jnp.asarray(rev)
+    rows_all = jnp.arange(n, dtype=jnp.int32)
+    outs = []
+    for s in range(0, n, node_chunk):
+        e = min(s + node_chunk, n)
+        rows = rows_all[s:e]
+        pool = jnp.concatenate([g[s:e], rv[s:e]], axis=1)
+        pool = jnp.where(pool == rows[:, None], -1, pool)
+        d = _chunk_dists(db, rows, pool, metric)
+        ci, cd = _merge_topk(pool, d, jnp.full((e - s, 1), -1, jnp.int32),
+                             jnp.full((e - s, 1), jnp.inf, jnp.float32),
+                             pool.shape[1])
+        outs.append(select_edges(db, rows, ci, cd, M=M, rule=rule,
+                                 metric=metric, alpha=alpha,
+                                 cos_theta=cos_theta))
+    return np.asarray(jnp.concatenate(outs, axis=0))
+
+
+def add_reverse_edges(graph: np.ndarray, max_degree: int) -> np.ndarray:
+    """Fill -1 slots with reverse edges (host-side build step).
+
+    Standard Vamana/NSG post-pass: every edge u->v proposes v->u; accepted
+    while v has spare capacity. Keeps the graph closer to strongly-connected.
+    """
+    graph = np.asarray(graph).copy()
+    n, M = graph.shape
+    assert max_degree <= M
+    deg = (graph >= 0).sum(axis=1)
+    existing = [set(row[row >= 0].tolist()) for row in graph]
+    for u in range(n):
+        for v in graph[u]:
+            if v < 0:
+                continue
+            v = int(v)
+            if deg[v] < max_degree and u not in existing[v]:
+                graph[v, deg[v]] = u
+                existing[v].add(u)
+                deg[v] += 1
+    return graph
+
+
+def search_candidates(db: jnp.ndarray, graph: jnp.ndarray, rows: jnp.ndarray,
+                      entry: int, metric: str, search_L: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Search-based candidate generation (paper: "refine each vertex's
+    neighborhood based on search results from the initial kNN graph").
+
+    Runs the batched KBest traversal with db[rows] as queries over the
+    current graph from the global entry point, returning the final candidate
+    queue per node. This is what creates cross-cluster backbone edges
+    (NSG/Vamana-style) that pure kNN + 2-hop expansion cannot: remote nodes
+    acquire edges toward the entry's basin, and the reverse-edge pass then
+    makes the link bidirectional.
+    """
+    from repro.core import search as search_mod
+    from repro.core.types import SearchConfig
+
+    cfg = SearchConfig(L=search_L, k=search_L, early_term=False,
+                       visited_mode="queue", n_entries=1)
+    dist_fn = search_mod.make_dist_fn(db, metric, "ref")
+    dists, ids, _ = search_mod.search(
+        graph, db[rows], jnp.array([entry], jnp.int32), dist_fn=dist_fn,
+        cfg=cfg, n_total=db.shape[0])
+    ids = jnp.where(ids == rows[:, None], -1, ids)   # drop self
+    dists = jnp.where(ids >= 0, dists, jnp.inf)
+    return ids.astype(jnp.int32), dists
+
+
+def refine_graph(db: jnp.ndarray, knn_ids: jnp.ndarray, knn_dists: jnp.ndarray,
+                 *, M: int, rule: str, metric: str, alpha: float,
+                 ssg_angle_deg: float, iters: int, cand_cap: int,
+                 entry: int = 0, search_L: int = 48, search_passes: int = 1,
+                 node_chunk: int = 512) -> np.ndarray:
+    """Full A1 pipeline. Returns the final (n, M) int32 padded CSR graph."""
+    cos_theta = float(np.cos(np.deg2rad(ssg_angle_deg)))
+    n = db.shape[0]
+    all_rows = jnp.arange(n, dtype=jnp.int32)
+
+    def _select(cids, cdists):
+        outs = []
+        for s in range(0, n, node_chunk):
+            e = min(s + node_chunk, n)
+            outs.append(select_edges(
+                db, all_rows[s:e], cids[s:e], cdists[s:e], M=M, rule=rule,
+                metric=metric, alpha=alpha, cos_theta=cos_theta))
+        return jnp.concatenate(outs, axis=0)
+
+    if rule == "none":
+        graph = knn_ids[:, :M]
+    else:
+        graph = _select(knn_ids, knn_dists)
+
+    # --- phase 2 of A1: search-based neighborhood refinement ----------------
+    # The graph searched during refinement is {current graph} ∪ {R random
+    # long edges per node}. Vamana gets global percolation by *initializing*
+    # with a random R-regular graph; augmenting the search graph with random
+    # edges gives the same property (build-time searches can cross cluster
+    # islands, so far-but-useful candidates enter the pools) without
+    # polluting the final edge set.
+    sel_rule = rule if rule != "none" else "alpha"
+    rng = np.random.default_rng(0)
+    n_rand = max(4, M // 4)
+    for _ in range(0 if rule == "none" else search_passes):
+        rand_edges = jnp.asarray(
+            rng.integers(0, n, size=(n, n_rand), dtype=np.int32))
+        search_graph = jnp.concatenate([jnp.asarray(graph), rand_edges], axis=1)
+        cid_chunks, cd_chunks = [], []
+        for s in range(0, n, node_chunk):
+            e = min(s + node_chunk, n)
+            sc_ids, sc_d = search_candidates(
+                db, search_graph, all_rows[s:e], entry, metric, search_L)
+            # pool: search results ∪ current edges ∪ original kNN
+            pool_ids = jnp.concatenate(
+                [sc_ids, graph[s:e], knn_ids[s:e]], axis=1)
+            pool_d = jnp.concatenate(
+                [sc_d, _chunk_dists(db, all_rows[s:e], graph[s:e], metric),
+                 knn_dists[s:e]], axis=1)
+            ci, cd = _merge_topk(
+                pool_ids, pool_d,
+                jnp.full((e - s, 1), -1, jnp.int32),
+                jnp.full((e - s, 1), jnp.inf, jnp.float32), cand_cap)
+            cid_chunks.append(ci)
+            cd_chunks.append(cd)
+        graph = _select(jnp.concatenate(cid_chunks, 0),
+                        jnp.concatenate(cd_chunks, 0))
+        # Vamana-style reverse pass with re-pruning: stitches islands.
+        graph = jnp.asarray(reverse_merge_select(
+            db, np.asarray(graph), M=M, rule=sel_rule, metric=metric,
+            alpha=alpha, cos_theta=cos_theta, node_chunk=node_chunk))
+
+    # --- phase 3 of A1: iterative 2-hop expansion ---------------------------
+    for _ in range(iters):
+        cid_chunks, cd_chunks = [], []
+        for s in range(0, n, node_chunk):
+            e = min(s + node_chunk, n)
+            ci, cd = expand_two_hop(db, graph, all_rows[s:e], C=cand_cap,
+                                    metric=metric)
+            cid_chunks.append(ci)
+            cd_chunks.append(cd)
+        cids = jnp.concatenate(cid_chunks, axis=0)
+        cdists = jnp.concatenate(cd_chunks, axis=0)
+        graph = _select(cids, cdists)
+
+    graph = add_reverse_edges(np.asarray(graph), M)
+    return connectivity_repair(db, graph, entry, metric)
+
+
+def connectivity_repair(db: jnp.ndarray, graph: np.ndarray, entry: int,
+                        metric: str) -> np.ndarray:
+    """NSG-style spanning pass: guarantee every node is reachable from the
+    entry by linking each unreachable region to its nearest reachable node
+    (replacing the victim's worst edge if it has no spare slot)."""
+    import collections
+    g = np.asarray(graph).copy()
+    n, M = g.shape
+    dbn = np.asarray(db)
+
+    def reachable_set():
+        seen = np.zeros(n, dtype=bool)
+        dq = collections.deque([entry])
+        seen[entry] = True
+        while dq:
+            u = dq.popleft()
+            for v in g[u]:
+                if v >= 0 and not seen[v]:
+                    seen[v] = True
+                    dq.append(int(v))
+        return seen
+
+    seen = reachable_set()
+    guard = 0
+    while not seen.all() and guard < n:
+        guard += 1
+        un = np.nonzero(~seen)[0]
+        re = np.nonzero(seen)[0]
+        # nearest (reachable, unreachable) pair under the metric, chunked
+        best = (np.inf, -1, -1)
+        for s in range(0, len(un), 512):
+            u_blk = un[s:s + 512]
+            if metric == "l2":
+                d = (((dbn[re] ** 2).sum(1)[:, None]
+                      + (dbn[u_blk] ** 2).sum(1)[None])
+                     - 2.0 * dbn[re] @ dbn[u_blk].T)
+            else:
+                d = -(dbn[re] @ dbn[u_blk].T)
+            ij = np.unravel_index(np.argmin(d), d.shape)
+            if d[ij] < best[0]:
+                best = (float(d[ij]), int(re[ij[0]]), int(u_blk[ij[1]]))
+        _, r, u = best
+        spare = np.nonzero(g[r] < 0)[0]
+        slot = spare[0] if len(spare) else M - 1   # replace worst (last) edge
+        g[r, slot] = u
+        # flood-fill from u through the existing graph
+        dq = collections.deque([u])
+        seen[u] = True
+        while dq:
+            w = dq.popleft()
+            for v in g[w]:
+                if v >= 0 and not seen[v]:
+                    seen[v] = True
+                    dq.append(int(v))
+    return g

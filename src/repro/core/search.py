@@ -1,0 +1,198 @@
+"""Batched best-first graph traversal (paper Algorithm 1 + Eq. 3).
+
+Hardware adaptation (DESIGN.md §2): the paper runs one search per CPU
+thread; a TPU has no independent scalar threads, so we run a *batch* of Q
+queries in SIMD lockstep inside one `jax.lax.while_loop`, with a per-query
+`active` mask. Each iteration expands one node per active query and computes
+distances to its M neighbors in a single (Q, M, d) batched operation — the
+paper's 1-to-B SIMD batching (H1) lifted to 2-D (Q-to-B) so it saturates the
+MXU/VPU. Queries that satisfy the early-termination test (Eq. 3) or exhaust
+their queue are masked off and become idle lanes (measured as
+`lockstep_overhead` in the benchmarks).
+
+The per-step neighbor batch B: the paper sizes B to the L1 cache (Eq. 1).
+On TPU the analogous constraint is VMEM tile sizing, which lives inside the
+Pallas kernels (repro/kernels); at this level B = M always, because XLA
+pipelines the whole (Q, M, d) gather+reduce.
+
+Visited-set semantics: "bitmap" mode implements Algorithm 1 exactly (a
+packed per-query bitmap of distance-computed nodes, O(n/8) bytes/query);
+"queue" mode (default) dedupes only against the candidate queue, which may
+recompute distances of long-evicted nodes but never changes recall — the
+classic memory/compute trade for huge n.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queue as qmod
+from repro.core.types import SearchConfig
+
+# dist_fn(queries (Q, d), nbr_ids (Q, M)) -> (Q, M) float32 distances.
+DistFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+class SearchStats(NamedTuple):
+    n_hops: jnp.ndarray        # (Q,) i32 nodes expanded
+    n_dist: jnp.ndarray        # (Q,) i32 distances computed
+    early_terminated: jnp.ndarray  # (Q,) bool
+    iters: jnp.ndarray         # () i32 lockstep iterations of the batch
+
+
+class _Carry(NamedTuple):
+    dists: jnp.ndarray    # (Q, L)
+    ids: jnp.ndarray      # (Q, L)
+    visited: jnp.ndarray  # (Q, L)
+    bitmap: jnp.ndarray   # (Q, W) u32 (W=1 dummy in queue mode)
+    et_ctr: jnp.ndarray   # (Q,) i32
+    et_fired: jnp.ndarray  # (Q,) bool
+    active: jnp.ndarray   # (Q,) bool
+    hops: jnp.ndarray     # (Q,) i32
+    ndist: jnp.ndarray    # (Q,) i32
+    it: jnp.ndarray       # () i32
+
+
+def _dedupe_row(ids: jnp.ndarray) -> jnp.ndarray:
+    """Mask (to -1) ids duplicating an earlier position in the row."""
+    m = ids.shape[0]
+    dup = jnp.any(
+        (ids[:, None] == ids[None, :]) & (jnp.arange(m)[None, :] < jnp.arange(m)[:, None]),
+        axis=1,
+    )
+    return jnp.where(dup | (ids < 0), -1, ids)
+
+
+def _bitmap_test(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """(W,) u32 bitmap, (M,) ids -> (M,) bool seen (invalid ids -> False)."""
+    safe = jnp.maximum(ids, 0)
+    words = bitmap[safe >> 5]
+    bit = (words >> (safe.astype(jnp.uint32) & 31)) & 1
+    return (bit == 1) & (ids >= 0)
+
+
+def _bitmap_set(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Set bits for (deduped, valid) ids. Disjoint bits => scatter-add == or."""
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    word_idx = jnp.where(valid, safe >> 5, bitmap.shape[0] - 1)
+    val = jnp.where(valid, jnp.uint32(1) << (safe.astype(jnp.uint32) & 31), jnp.uint32(0))
+    return bitmap.at[word_idx].add(val)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "n_total", "dist_fn"),
+)
+def search(
+    graph: jnp.ndarray,            # (n, M) i32, -1 padded
+    queries: jnp.ndarray,          # (Q, d) f32
+    entry_ids: jnp.ndarray,        # (E,) i32 entry points
+    *,
+    dist_fn: DistFn,
+    cfg: SearchConfig,
+    n_total: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, SearchStats]:
+    """Batched ANN search. Returns (dists (Q, k), ids (Q, k), stats)."""
+    Q = queries.shape[0]
+    L, k, M = cfg.L, cfg.k, graph.shape[1]
+    t_pos = jnp.int32(int(cfg.et_t_frac * L))
+    W = (n_total + 31) // 32 if cfg.visited_mode == "bitmap" else 1
+
+    # ---- init: seed the queue with the entry points -----------------------
+    e_ids = jnp.broadcast_to(entry_ids[None, :], (Q, entry_ids.shape[0]))
+    e_dists = dist_fn(queries, e_ids)
+    q0 = qmod.init_queue(L)
+    q0 = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (Q,) + x.shape), q0)
+
+    def _seed(qq, nd, ni):
+        out, _, _ = qmod.merge_insert(qq, nd, ni)
+        return out
+
+    queue = jax.vmap(_seed)(qmod.Queue(q0[0], q0[1], q0[2]), e_dists, e_ids)
+    bitmap = jnp.zeros((Q, W), dtype=jnp.uint32)
+    if cfg.visited_mode == "bitmap":
+        bitmap = jax.vmap(_bitmap_set)(bitmap, e_ids)
+
+    carry = _Carry(
+        dists=queue.dists, ids=queue.ids, visited=queue.visited,
+        bitmap=bitmap,
+        et_ctr=jnp.zeros((Q,), jnp.int32),
+        et_fired=jnp.zeros((Q,), bool),
+        active=jnp.ones((Q,), bool),
+        hops=jnp.zeros((Q,), jnp.int32),
+        ndist=jnp.zeros((Q,), jnp.int32),
+        it=jnp.int32(0),
+    )
+
+    def cond(c: _Carry):
+        return jnp.any(c.active) & (c.it < cfg.hops_bound)
+
+    def body(c: _Carry) -> _Carry:
+        queue = qmod.Queue(c.dists, c.ids, c.visited)
+        idx, has = jax.vmap(qmod.pick_unvisited)(queue)
+        expand = c.active & has
+        v = jnp.where(expand, queue.ids[jnp.arange(Q), idx], -1)
+        queue = jax.vmap(qmod.mark_visited)(queue, idx, expand)
+
+        # gather neighbor lists; -1 rows for inactive lanes
+        nbrs = jnp.where(v[:, None] >= 0, graph[jnp.maximum(v, 0)], -1)
+        nbrs = jax.vmap(_dedupe_row)(nbrs)
+
+        bitmap = c.bitmap
+        if cfg.visited_mode == "bitmap":
+            seen = jax.vmap(_bitmap_test)(bitmap, nbrs)
+            nbrs = jnp.where(seen, -1, nbrs)
+            bitmap = jax.vmap(_bitmap_set)(bitmap, nbrs)
+
+        # --- the 1-to-B (here Q-to-B) batched distance computation (H1) ---
+        nd = dist_fn(queries, nbrs)
+        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
+        n_new = jnp.sum(nbrs >= 0, axis=1).astype(jnp.int32)
+
+        merged, best_rank, _ = jax.vmap(qmod.merge_insert)(queue, nd, nbrs)
+        queue = jax.tree.map(
+            lambda new, old: jnp.where(
+                expand.reshape((Q,) + (1,) * (new.ndim - 1)), new, old),
+            merged, queue)
+
+        # --- early termination, Eq. 3 ---
+        beyond = best_rank > t_pos
+        et_ctr = jnp.where(expand, jnp.where(beyond, c.et_ctr + 1, 0), c.et_ctr)
+        fired = c.et_fired | (cfg.early_term & expand & (et_ctr >= cfg.et_patience))
+
+        hops = c.hops + expand.astype(jnp.int32)
+        ndist = c.ndist + jnp.where(expand, n_new, 0)
+        active = c.active & has & ~fired & (hops < cfg.hops_bound)
+        return _Carry(queue.dists, queue.ids, queue.visited, bitmap,
+                      et_ctr, fired, active, hops, ndist, c.it + 1)
+
+    out = jax.lax.while_loop(cond, body, carry)
+    final = qmod.Queue(out.dists, out.ids, out.visited)
+    dists_k, ids_k = jax.vmap(lambda q: qmod.topk(q, k))(final)
+    stats = SearchStats(out.hops, out.ndist, out.et_fired, out.it)
+    return dists_k, ids_k, stats
+
+
+def make_dist_fn(db: jnp.ndarray, metric: str, impl: str = "ref") -> DistFn:
+    """Gather-then-distance backend over a database (n, d).
+
+    impl="ref" is the jnp oracle; impl="kernel" routes through the Pallas
+    gather_dist kernel (interpret-mode on CPU).
+    """
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def fn(queries, nbr_ids):
+            return kops.gather_dist(queries, db, nbr_ids, metric=metric)
+        return fn
+
+    from repro.core.distance import batched_one_to_many
+
+    def fn(queries, nbr_ids):
+        vecs = db[jnp.maximum(nbr_ids, 0)]
+        return batched_one_to_many(queries, vecs, metric)
+    return fn

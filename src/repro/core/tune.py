@@ -1,0 +1,54 @@
+"""Early-termination parameter tuning (paper §3.2, A3).
+
+The paper determines (t, tau_max) with a two-stage dry-run: initialize t at
+~60% of L, binary-search tau_max under the recall constraint, then sweep t
+down from 60% toward 30% of L keeping the fastest setting that still meets
+the recall target. This module reproduces that procedure against a held-out
+query sample with exact ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.types import SearchConfig
+from repro.data.vectors import recall_at_k
+
+
+def _eval(index, queries, gt_ids, scfg: SearchConfig) -> Tuple[float, float]:
+    d, i, stats = index.search(queries, search_cfg=scfg, with_stats=True)
+    rec = recall_at_k(np.asarray(i), gt_ids, scfg.k)
+    hops = float(np.asarray(stats.n_hops).mean())
+    return rec, hops
+
+
+def tune_early_term(index, queries: np.ndarray, gt_ids: np.ndarray,
+                    base_cfg: SearchConfig, recall_target: float = 0.95,
+                    patience_hi: int = 64) -> SearchConfig:
+    """Two-stage (t, tau_max) search as in the paper. Returns a tuned cfg."""
+    best = dataclasses.replace(base_cfg, early_term=False)
+    rec0, hops0 = _eval(index, queries, gt_ids, best)
+    # An ET config is admissible if recall does not drop below
+    # min(recall_target, no-ET recall) - small slack.
+    floor = min(recall_target, rec0) - 0.005
+    best_hops = hops0
+
+    for t_frac in (0.6, 0.5, 0.4, 0.3):
+        # binary search the smallest admissible patience for this t
+        lo, hi = 1, patience_hi
+        admissible = None
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            cand = dataclasses.replace(base_cfg, early_term=True,
+                                       et_t_frac=t_frac, et_patience=mid)
+            rec, hops = _eval(index, queries, gt_ids, cand)
+            if rec >= floor:
+                admissible = (cand, hops)
+                hi = mid - 1      # try more aggressive (smaller patience)
+            else:
+                lo = mid + 1
+        if admissible and admissible[1] < best_hops:
+            best, best_hops = admissible
+    return best

@@ -1,0 +1,100 @@
+"""Shared dataclasses for the KBest core library.
+
+All configs are plain frozen dataclasses so they hash (usable as jit static
+args) and serialize trivially into checkpoint metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Distance metrics. "l2" is squared Euclidean (monotone in true L2, the
+# standard ANNS convention), "ip" is negative inner product, "cosine" is
+# negative cosine similarity (vectors are L2-normalized at add() time and the
+# metric degenerates to "ip").
+METRICS = ("l2", "ip", "cosine")
+
+# Edge-selection rules supported by the refinement pipeline (paper §3.2).
+SELECT_RULES = ("none", "hnsw", "alpha", "ssg")
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Index-construction parameters (paper: Add / build phase)."""
+
+    M: int = 32                  # fixed out-degree of the CSR graph
+    knn_k: int = 48              # size of the initial kNN neighborhood
+    builder: str = "auto"        # "brute" | "nn_descent" | "auto"
+    nn_descent_rounds: int = 6   # NN-descent iterations
+    nn_descent_sample: int = 12  # neighbors-of-neighbors sampled per round
+    select_rule: str = "alpha"   # edge selection rule (SELECT_RULES)
+    alpha: float = 1.2           # Vamana/NSG pruning slack
+    ssg_angle_deg: float = 60.0  # SSG minimum pairwise edge angle
+    refine_iters: int = 1        # F: 2-hop iterative refinement rounds (A1)
+    refine_cands: int = 96       # candidate pool cap per node during refine
+    search_passes: int = 1       # search-based refinement passes (A1 phase 2)
+    search_L: int = 48           # queue size of the build-time searches
+    reorder: str = "mst"         # "none" | "mst" (Algorithm 2) | "cm"
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.select_rule in SELECT_RULES, self.select_rule
+        assert self.builder in ("brute", "nn_descent", "auto"), self.builder
+        assert self.M >= 2 and self.knn_k >= self.M
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Query-time parameters (paper: Search phase, Algorithm 1 + Eq. 3)."""
+
+    L: int = 64                  # candidate queue size (a.k.a. efSearch)
+    k: int = 10                  # results returned
+    max_hops: int = 0            # 0 => derived (4*L) safety bound
+    # --- early termination (Eq. 3) ---
+    early_term: bool = True
+    et_t_frac: float = 0.6       # threshold position t as a fraction of L
+    et_patience: int = 16        # tau_max: consecutive beyond-t insertions
+    # --- batched traversal ---
+    visited_mode: str = "queue"  # "queue" (in-queue dedupe) | "bitmap" (exact)
+    dist_impl: str = "ref"       # "ref" | "kernel" — distance backend
+    batch_B: int = 0             # 1-to-B batch size; 0 => M (full neighbor set)
+    n_entries: int = 8           # entry points: medoid + (n-1) strided seeds
+
+    def __post_init__(self):
+        assert self.k <= self.L, (self.k, self.L)
+        assert self.visited_mode in ("queue", "bitmap")
+        assert 0.0 < self.et_t_frac <= 1.0
+
+    @property
+    def hops_bound(self) -> int:
+        return self.max_hops if self.max_hops > 0 else 4 * self.L
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Vector quantization (paper §3.2, A4). kind: "none" | "pq" | "sq"."""
+
+    kind: str = "none"
+    pq_m: int = 8                # number of PQ subspaces
+    pq_bits: int = 8             # bits per code (256 centroids)
+    kmeans_iters: int = 10
+    rerank: int = 0              # exact re-rank depth (0 => 4*k at search)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("none", "pq", "sq")
+        assert self.pq_bits == 8, "only 8-bit codes are implemented"
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Top-level config handed to KBest(config) (paper Table 2)."""
+
+    dim: int
+    metric: str = "l2"
+    build: BuildConfig = dataclasses.field(default_factory=BuildConfig)
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+
+    def __post_init__(self):
+        assert self.metric in METRICS, self.metric

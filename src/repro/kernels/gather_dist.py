@@ -1,0 +1,79 @@
+"""gather_dist — scalar-prefetch gather + distance kernel (paper H2 on TPU).
+
+The paper's software prefetch (`prfm PLDL1KEEP`) hides HBM latency by
+requesting neighbor vectors before the compute that needs them. TPUs have no
+cache-prefetch instruction; the native equivalent is the Pallas pipeline
+engine itself: when an input's BlockSpec index_map depends on a
+*scalar-prefetch* operand, the engine reads the index array ahead of the
+grid and issues the HBM->VMEM DMA for step (i+1)'s block while step i's
+compute runs — automatic double buffering driven by the neighbor-id array,
+i.e. exactly "prefetch the adjacency targets of the node being expanded"
+(paper Fig. 5) expressed structurally.
+
+Grid: (Q, M/TB). Per step the engine gathers a row-block of TB neighbor
+vectors (TB rows DMA'd by index) and the kernel computes TB distances to the
+query row. Invalid ids (< 0, CSR padding) are clamped for the DMA and masked
+to +inf by the wrapper in ops.py.
+
+NOTE on granularity: one grid step per (query, neighbor-block) keeps each
+DMA a contiguous (TB, d) region only when neighbor ids are contiguous after
+graph reordering (A2!) — otherwise the engine issues TB row-DMAs. Either
+way compute/DMA overlap is preserved; the reorder benefit shows up as fewer
+distinct pages per step (benchmarks/ablation.py `locality`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_l2(idx_ref, q_ref, row_ref, o_ref):
+    # q_ref: (1, d); row_ref: (1, d) — the gathered neighbor vector
+    q = q_ref[...].astype(jnp.float32)
+    r = row_ref[...].astype(jnp.float32)
+    diff = r - q
+    o_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+def _kernel_ip(idx_ref, q_ref, row_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    r = row_ref[...].astype(jnp.float32)
+    o_ref[...] = -jnp.sum(r * q, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_dist(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray, *,
+                metric: str = "l2", interpret: bool = False) -> jnp.ndarray:
+    """(Q, d) queries, (n, d) db, (Q, M) int32 ids -> (Q, M) f32 distances.
+
+    ids < 0 are treated as 0 for the gather; the caller masks them. d must
+    be lane-aligned (multiple of 128 on real hardware).
+    """
+    Q, d = q.shape
+    M = ids.shape[1]
+    assert ids.shape[0] == Q
+    safe_ids = jnp.maximum(ids, 0)
+    kernel = _kernel_l2 if metric == "l2" else _kernel_ip
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (i, 0)),
+            # the prefetch-driven gather: the DB block for step (i, j) is
+            # row idx[i, j]; the pipeline engine DMAs it one step ahead.
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, M), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, q, db)
+    return jnp.where(ids >= 0, out, jnp.inf)

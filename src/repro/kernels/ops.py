@@ -1,0 +1,58 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Handles: lane-width padding (d -> multiple of 128, the H3 alignment
+analogue), tile padding of Q/B, interpret-mode auto-detection (CPU backend
+runs kernels in interpret mode for validation; real TPU compiles Mosaic),
+and masking of CSR -1 padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import batch_dist as _bd
+from repro.kernels import gather_dist as _gd
+from repro.kernels import pq_adc as _pq
+
+LANE = 128
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_dim(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def batch_dist(q: jnp.ndarray, x: jnp.ndarray, *, metric: str = "l2",
+               tq: int = 128, tb: int = 128) -> jnp.ndarray:
+    """(Q, d) x (B, d) -> (Q, B); any shapes, padding handled here."""
+    Q, B = q.shape[0], x.shape[0]
+    qp = _pad_dim(_pad_dim(q, 1, LANE), 0, tq)
+    xp = _pad_dim(_pad_dim(x, 1, LANE), 0, tb)
+    out = _bd.batch_dist(qp, xp, metric=metric, tq=tq, tb=tb,
+                         interpret=_on_cpu())
+    return out[:Q, :B]
+
+
+def gather_dist(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray, *,
+                metric: str = "l2") -> jnp.ndarray:
+    """(Q, d), (n, d), (Q, M) -> (Q, M); -1 ids produce +inf."""
+    qp = _pad_dim(q, 1, LANE)
+    dbp = _pad_dim(db, 1, LANE)
+    return _gd.gather_dist(qp, dbp, ids, metric=metric, interpret=_on_cpu())
+
+
+def pq_adc(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
+           ) -> jnp.ndarray:
+    """(Q, m, K), (n, m) u8, (Q, B) -> (Q, B); -1 ids produce +inf."""
+    return _pq.pq_adc(lut, codes, ids, interpret=_on_cpu())

@@ -1,0 +1,59 @@
+"""pq_adc — PQ asymmetric-distance kernel (paper A4, ScaNN-style on MXU).
+
+ADC distance of a database code against a query lookup table:
+    dist[q, b] = sum_j LUT[q, j, code[ids[q, b], j]]
+
+x86 libraries implement the LUT gather with AVX shuffle bytes; the TPU has
+no register shuffle, but the MXU gives the native equivalent: one-hot expand
+the (m,) code row and contract it against the (m, K) LUT — a (1, m*K) x
+(m*K, 1) dot, i.e. the gather becomes a matmul, which is exactly how the MXU
+wants to consume it. Codes rows are fetched by the same scalar-prefetch
+gather mechanism as gather_dist (H2), so code reads for step i+1 overlap
+step i's arithmetic.
+
+Grid: (Q, B); blocks: LUT (1, m, K) by q, codes (1, m) by ids[q, b].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, lut_ref, code_ref, o_ref):
+    lut = lut_ref[...].astype(jnp.float32)        # (1, m, K)
+    code = code_ref[...].astype(jnp.int32)        # (1, m)
+    m, K = lut.shape[1], lut.shape[2]
+    onehot = (code[0, :, None] == jax.lax.broadcasted_iota(jnp.int32, (m, K), 1)
+              ).astype(jnp.float32)               # (m, K)
+    o_ref[...] = jnp.sum(lut[0] * onehot).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq_adc(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray, *,
+           interpret: bool = False) -> jnp.ndarray:
+    """(Q, m, K) luts, (n, m) uint8 codes, (Q, B) int32 ids -> (Q, B) f32."""
+    Q, m, K = lut.shape
+    B = ids.shape[1]
+    assert ids.shape[0] == Q
+    safe_ids = jnp.maximum(ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, B),
+        in_specs=[
+            pl.BlockSpec((1, m, K), lambda i, j, idx_ref: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, B), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, lut, codes)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification; tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batch_dist_ref(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(Q, d), (B, d) -> (Q, B) distance matrix."""
+    if metric == "l2":
+        qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[None, :]
+        qx = q.astype(jnp.float32) @ x.astype(jnp.float32).T
+        return jnp.maximum(qq + xx - 2.0 * qx, 0.0)
+    return -(q.astype(jnp.float32) @ x.astype(jnp.float32).T)
+
+
+def gather_dist_ref(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray,
+                    metric: str) -> jnp.ndarray:
+    """(Q, d) queries, (n, d) db, (Q, M) ids -> (Q, M) distances.
+
+    Invalid ids (< 0) produce +inf.
+    """
+    vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)        # (Q, M, d)
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = vecs - qf[:, None, :]
+        out = jnp.sum(diff * diff, axis=-1)
+    else:
+        out = -jnp.einsum("qmd,qd->qm", vecs, qf)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
+               ) -> jnp.ndarray:
+    """(Q, m, K) luts, (n, m) uint8 codes, (Q, B) ids -> (Q, B) ADC dists.
+
+    dist[q, b] = sum_j lut[q, j, codes[ids[q, b], j]]; invalid ids -> +inf.
+    """
+    c = codes[jnp.maximum(ids, 0)].astype(jnp.int32)          # (Q, B, m)
+    g = jnp.take_along_axis(lut[:, None, :, :], c[..., None], axis=-1)[..., 0]
+    out = jnp.sum(g, axis=-1)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -1,0 +1,20 @@
+"""Production mesh construction (DESIGN.md §4, system-prompt contract).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (jax locks the device count at first backend init, and tests
+must see 1 CPU device while the dry-run sees 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,71 @@
+"""Serving launcher: KBest ANNS service or model serve steps.
+
+    # ANNS service over a synthetic corpus
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --n 4000
+
+    # one decode step of a smoke LM with a KV cache (the decode_32k path)
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma-2b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_ann(n: int):
+    from repro.core.index import KBest
+    from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+    from repro.data.vectors import make_dataset, recall_at_k
+    ds = make_dataset("deep_like", n=n, n_queries=100, k=10)
+    cfg = IndexConfig(dim=ds.base.shape[1], metric=ds.metric,
+                      build=BuildConfig(M=32, knn_k=48, refine_iters=1,
+                                        reorder="mst"),
+                      search=SearchConfig(L=64, k=10, early_term=True))
+    idx = KBest(cfg).add(ds.base)
+    idx.search(ds.queries[:8])
+    t0 = time.perf_counter()
+    d, i = idx.search(ds.queries)
+    np.asarray(d)
+    dt = time.perf_counter() - t0
+    print(f"served {len(ds.queries)} queries in {dt*1e3:.1f} ms "
+          f"(CPU interpret) recall@10="
+          f"{recall_at_k(np.asarray(i), ds.gt_ids, 10):.3f}")
+
+
+def serve_lm(arch: str):
+    from repro import configs as reg
+    from repro.models import transformer as T
+    cfg = reg.get(arch).smoke_config()
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, 2, 64, dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 1), 0, cfg.vocab)
+    step = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+    logits, cache = step(p, cache, toks)          # compile
+    t0 = time.perf_counter()
+    for _ in range(16):
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        logits, cache = step(p, cache, nxt)
+    jax.block_until_ready(logits)
+    dt = (time.perf_counter() - t0) / 16
+    print(f"{arch}: {dt*1e3:.2f} ms/token (smoke config, CPU), "
+          f"cache len={int(cache['len'][0])}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--n", type=int, default=4000)
+    args = ap.parse_args()
+    if args.mode == "ann":
+        serve_ann(args.n)
+    else:
+        serve_lm(args.arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,427 @@
+"""Per-(arch x shape) dry-run cell builders.
+
+For each of the 40 assigned cells this module produces:
+  step_fn      the function to lower (train_step / serve_step / prefill /
+               retrieval — per the shape's kind),
+  arg_specs    ShapeDtypeStruct stand-ins for every input (weak-type
+               correct, shardable, NO device allocation),
+  in_shardings matching NamedShardings from sharding/rules.py.
+
+The returned closure is what launch/dryrun.py lowers + compiles on the
+production meshes. Optimizer choice: AdamW for <= 20B-param models,
+Adafactor for the MoE giants (factored second moment — the difference
+between fitting and not fitting v5e HBM; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as cfg_registry
+from repro.sharding import rules
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str                    # train | prefill | decode | serve | retrieval
+    step_fn: Callable
+    args: Tuple                  # ShapeDtypeStructs
+    in_shardings: Tuple
+    meta: Dict[str, Any]         # model-flops accounting inputs etc.
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# =========================================================== LM cells ======
+LM_SHAPE_PARAMS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _lm_param_count(cfg) -> float:
+    """Total and active parameter counts (for MODEL_FLOPS = 6*N*D)."""
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd) \
+        + (cfg.n_heads * hd) * d
+    if cfg.moe is not None:
+        m = cfg.moe
+        per_exp = (3 if m.gated else 2) * d * m.d_ff_expert
+        moe_total = m.n_experts * per_exp
+        moe_active = m.top_k * per_exp
+        shared = m.n_shared_experts * per_exp
+        total = cfg.n_layers * (attn + moe_total + shared)
+        active = cfg.n_layers * (attn + moe_active + shared)
+    else:
+        mlp = (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+        total = cfg.n_layers * (attn + mlp)
+        active = total
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return total + emb, active + emb
+
+
+def _lm_cell(arch: str, shape: str, mesh: Mesh, depth=None,
+             unroll=False, opts=None) -> Cell:
+    import dataclasses
+
+    from repro.models import transformer as T
+
+    opts = opts or {}
+    mod = cfg_registry.get(arch)
+    cfg = mod.full_config()
+    if depth is not None or unroll:
+        cfg = dataclasses.replace(
+            cfg, n_layers=depth or cfg.n_layers, unroll_layers=unroll)
+    dp = rules.dp_axes(mesh)
+    moe_d_sharded = False
+    if opts.get("moe_sm") and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, ep_axis="data", tp_axis="model", token_axes=dp,
+            use_shardmap=True, ep_size=mesh.shape["data"],
+            tp_size=mesh.shape["model"]))
+        moe_d_sharded = True
+    elif opts.get("moe_ep") and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, ep_axis="data", tp_axis="model", token_axes=dp))
+    if opts.get("lm_loss"):
+        cfg = dataclasses.replace(cfg, loss_vocab_axis="model",
+                                  loss_batch_axes=dp,
+                                  loss_vocab_shards=mesh.shape["model"])
+    if opts.get("remat_dots"):
+        cfg = dataclasses.replace(cfg, remat_policy=opts["remat_dots"]
+                                  if isinstance(opts["remat_dots"], str)
+                                  else "dots")
+    sp = LM_SHAPE_PARAMS[shape]
+    B, S = sp["batch"], sp["seq"]
+    kind = sp["kind"]
+
+    params_s = _eval_shapes(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    p_sh = rules.tree_param_shardings(params_s, mesh, "lm",
+                                      moe_d_sharded=moe_d_sharded)
+    n_total, n_active = _lm_param_count(cfg)
+    opt_cfg = OptConfig(kind="adafactor" if cfg.moe is not None else "adamw")
+
+    if kind == "train":
+        opt_s = _eval_shapes(
+            functools.partial(opt_init, cfg=opt_cfg), params_s)
+        o_sh = _opt_shardings(opt_s, p_sh, mesh)
+        batch = {"tokens": _sds((B, S + 1), I32)}
+        b_sh = rules.tree_batch_shardings(batch, mesh, "lm")
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                T.loss_fn, has_aux=True)(params, batch, cfg)
+            new_p, new_s, gnorm = opt_update(grads, opt_state, params, opt_cfg)
+            return new_p, new_s, loss
+
+        return Cell(arch, shape, kind, step, (params_s, opt_s, batch),
+                    (p_sh, o_sh, b_sh),
+                    dict(model_flops=6.0 * n_active * B * S, tokens=B * S,
+                         n_total=n_total, n_active=n_active))
+
+    if kind == "prefill":
+        tokens = _sds((B, S), I32)
+        t_sh = rules.tree_batch_shardings(tokens, mesh, "lm")
+
+        def step(params, tokens):
+            return T.prefill(params, tokens, cfg)
+
+        return Cell(arch, shape, kind, step, (params_s, tokens),
+                    (p_sh, t_sh),
+                    dict(model_flops=2.0 * n_active * B * S, tokens=B * S,
+                         n_total=n_total, n_active=n_active))
+
+    # decode
+    cache_s = _eval_shapes(
+        functools.partial(T.init_cache, cfg, B, S), )
+    c_sh = rules.lm_cache_shardings(cache_s, mesh)
+    tokens = _sds((B, 1), I32)
+    t_sh = rules.tree_batch_shardings(tokens, mesh, "lm")
+
+    def step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg)
+
+    # decode flops: 2*N_active per token + cache read bytes dominate
+    return Cell(arch, shape, "decode", step, (params_s, cache_s, tokens),
+                (p_sh, c_sh, t_sh),
+                dict(model_flops=2.0 * n_active * B, tokens=B,
+                     n_total=n_total, n_active=n_active,
+                     cache_bytes=2 * cfg.n_layers * B * S
+                     * cfg.n_kv_heads * cfg.hd * 2))
+
+
+def _opt_shardings(opt_s, p_sh, mesh):
+    """ZeRO-1 shardings for optimizer moments: param spec (rank-adapted for
+    Adafactor's factored vr/vc) + DP over the largest replicated dim.
+    Moment trees have the param tree as a prefix."""
+    def fill(ps, subtree):
+        pspec = list(ps.spec) if hasattr(ps, "spec") else []
+
+        def leaf(path, x):
+            key = str(getattr(path[-1], "key", "")) if path else ""
+            r = len(x.shape)
+            parts = pspec + [None] * (r + 1 - len(pspec))
+            if key == "vr":          # param.shape[:-1] -> drop last spec dim
+                spec = P(*parts[:r])
+            elif key == "vc":        # param.shape[:-2] + (param.shape[-1],)
+                spec = P(*(parts[:r - 1] + [parts[r]]))
+            else:                    # v / m: same shape as param
+                spec = P(*parts[:r])
+            spec = rules.zero1_state_spec(spec, x.shape, mesh)
+            return NamedSharding(mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(leaf, subtree)
+
+    def map_state(state):
+        out = {}
+        for k, v in state.items():
+            if k == "count":
+                out[k] = NamedSharding(mesh, P())
+            elif k in ("m", "v"):
+                out[k] = jax.tree.map(
+                    lambda ps, sub: fill(ps, sub), p_sh, v,
+                    is_leaf=lambda x: isinstance(x, NamedSharding))
+            else:
+                out[k] = jax.tree.map(lambda _: NamedSharding(mesh, P()), v)
+        return out
+    return map_state(opt_s)
+
+
+# ========================================================== GNN cells ======
+def _gnn_cell(arch: str, shape: str, mesh: Mesh, depth=None,
+              unroll=False, opts=None) -> Cell:
+    import dataclasses
+
+    from repro.configs.dimenet import SHAPE_PARAMS, TRIPLET_CAP
+    from repro.models import dimenet as D
+
+    opts = opts or {}
+    mod = cfg_registry.get(arch)
+    cfg = mod.full_config(shape)
+    if depth is not None or unroll:
+        cfg = dataclasses.replace(
+            cfg, n_blocks=depth or cfg.n_blocks, unroll_blocks=unroll)
+    if opts.get("gnn_remat"):
+        cfg = dataclasses.replace(cfg, remat=True)
+    sp = SHAPE_PARAMS[shape]
+
+    if shape == "minibatch_lg":
+        b = sp["batch_nodes"]
+        f1, f2 = sp["fanouts"]
+        N = b + b * f1 + b * f1 * f2
+        E = b * f1 + b * f1 * f2
+    elif shape == "molecule":
+        N = sp["n_nodes"] * sp["batch"]
+        E = sp["n_edges"] * sp["batch"]
+    else:
+        N, E = sp["n_nodes"], sp["n_edges"]
+    T_ = E * TRIPLET_CAP
+    n_graphs = sp.get("batch", 1)
+
+    batch = {
+        "feats": _sds((N, sp["d_feat"]), F32),
+        "pos": _sds((N, 3), F32),
+        "edge_src": _sds((E,), I32), "edge_dst": _sds((E,), I32),
+        "trip_kj": _sds((T_,), I32), "trip_ji": _sds((T_,), I32),
+    }
+    if cfg.task == "graph_reg":
+        batch["node_graph"] = _sds((N,), I32)
+        batch["targets"] = _sds((n_graphs,), F32)
+    else:
+        batch["labels"] = _sds((N,), I32)
+
+    params_s = _eval_shapes(
+        functools.partial(D.init_params, cfg), jax.random.PRNGKey(0))
+    p_sh = rules.tree_param_shardings(params_s, mesh, "gnn")
+    b_sh = rules.tree_batch_shardings(batch, mesh, "gnn",
+                                      gnn_shard_all=bool(opts.get("gnn_shard_all")))
+    opt_cfg = OptConfig(kind="adamw")
+    opt_s = _eval_shapes(functools.partial(opt_init, cfg=opt_cfg), params_s)
+    o_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_s)
+
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            D.loss_fn, has_aux=True)(params, batch, cfg, n_graphs)
+        new_p, new_s, _ = opt_update(grads, opt_state, params, opt_cfg)
+        return new_p, new_s, loss
+
+    # message-passing flops: per block, triplet gather T*nb + edge GEMMs
+    H = cfg.d_hidden
+    mf = cfg.n_blocks * (2.0 * E * H * H * 4 + 2.0 * T_ * cfg.n_bilinear) \
+        + 2.0 * N * sp["d_feat"] * H
+    return Cell(arch, shape, "train", step, (params_s, opt_s, batch),
+                (p_sh, o_sh, b_sh), dict(model_flops=mf, tokens=N))
+
+
+# ======================================================= recsys cells ======
+RECSYS_SHAPE_PARAMS = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def _recsys_batch_specs(cfg, B: int, kind: str) -> dict:
+    if cfg.kind in ("fm", "deepfm"):
+        b = {"sparse_ids": _sds((B, cfg.n_sparse), I32)}
+        if kind == "train":
+            b["label"] = _sds((B,), F32)
+    elif cfg.kind == "bst":
+        b = {"hist": _sds((B, cfg.seq_len), I32),
+             "target": _sds((B,), I32)}
+        if kind == "train":
+            b["label"] = _sds((B,), F32)
+    else:  # bert4rec
+        b = {"seq": _sds((B, cfg.seq_len), I32)}
+        if kind == "train":
+            b["labels"] = _sds((B, cfg.seq_len), I32)
+        elif kind == "serve":
+            b["cand"] = _sds((B,), I32)
+    return b
+
+
+def _recsys_flops(cfg, B: int) -> float:
+    if cfg.kind in ("fm", "deepfm"):
+        f = 2.0 * B * cfg.n_sparse * cfg.embed_dim
+        if cfg.kind == "deepfm":
+            dims = (cfg.n_sparse * cfg.embed_dim,) + tuple(cfg.mlp_dims) + (1,)
+            f += 2.0 * B * sum(a * b for a, b in zip(dims, dims[1:]))
+        return f
+    S, Dm = (cfg.seq_len + (1 if cfg.kind == "bst" else 0)), cfg.d_model
+    per_block = 2.0 * S * (4 * Dm * Dm) + 2.0 * S * S * Dm * 2 \
+        + 2.0 * S * (8 * Dm * Dm)
+    f = B * cfg.n_blocks * per_block
+    if cfg.kind == "bst":
+        dims = (S * Dm,) + tuple(cfg.mlp_dims) + (1,)
+        f += 2.0 * B * sum(a * b for a, b in zip(dims, dims[1:]))
+    return f
+
+
+def _recsys_cell(arch: str, shape: str, mesh: Mesh, depth=None,
+                 unroll=False, opts=None) -> Cell:
+    import dataclasses
+
+    from repro.models import recsys as R
+
+    opts = opts or {}
+    mod = cfg_registry.get(arch)
+    cfg = mod.full_config()
+    if depth is not None or unroll:
+        cfg = dataclasses.replace(
+            cfg, n_blocks=depth or cfg.n_blocks, unroll_blocks=unroll)
+    if opts.get("masked_loss") and cfg.kind == "bert4rec":
+        cfg = dataclasses.replace(cfg, masked_positions=40)
+    sp = RECSYS_SHAPE_PARAMS[shape]
+    B, kind = sp["batch"], sp["kind"]
+
+    params_s = _eval_shapes(
+        functools.partial(R.init_params, cfg), jax.random.PRNGKey(0))
+    p_sh = rules.tree_param_shardings(params_s, mesh, "recsys")
+    batch = _recsys_batch_specs(cfg, B, kind)
+    b_sh = rules.tree_batch_shardings(batch, mesh, "recsys")
+
+    if kind == "train":
+        opt_cfg = OptConfig(kind="adamw")
+        opt_s = _eval_shapes(functools.partial(opt_init, cfg=opt_cfg), params_s)
+        o_sh = _opt_shardings(opt_s, p_sh, mesh)
+
+        def step(params, opt_state, batch):
+            (loss, _), grads = jax.value_and_grad(
+                R.loss_fn, has_aux=True)(params, batch, cfg)
+            new_p, new_s, _ = opt_update(grads, opt_state, params, opt_cfg)
+            return new_p, new_s, loss
+
+        return Cell(arch, shape, kind, step, (params_s, opt_s, batch),
+                    (p_sh, o_sh, b_sh),
+                    dict(model_flops=3.0 * _recsys_flops(cfg, B), tokens=B))
+
+    if kind == "serve":
+        def step(params, batch):
+            return R.serve_step(params, batch, cfg)
+
+        return Cell(arch, shape, kind, step, (params_s, batch), (p_sh, b_sh),
+                    dict(model_flops=_recsys_flops(cfg, B), tokens=B))
+
+    # retrieval: the paper's vector-search workload, exact 1-to-B path
+    n_cand = sp["n_candidates"]
+
+    if opts.get("retrieval_sharded"):
+        def step(params, batch):
+            return R.serve_retrieval_shardmap(params, batch, cfg, mesh,
+                                              k=100)
+    else:
+        def step(params, batch):
+            return R.serve_retrieval(params, batch, cfg, k=100)
+
+    D_ = cfg.embed_dim if cfg.kind in ("fm", "deepfm") else cfg.d_model
+    return Cell(arch, shape, kind, step, (params_s, batch), (p_sh, b_sh),
+                dict(model_flops=_recsys_flops(cfg, B)
+                     + 2.0 * B * n_cand * D_, tokens=B,
+                     n_candidates=n_cand))
+
+
+# ================================================================ facade ===
+# Named optimization variants (EXPERIMENTS.md §Perf). "baseline" is the
+# paper-faithful configuration; each variant toggles one hillclimb change.
+VARIANTS = {
+    "baseline": {},
+    "moe_ep": {"moe_ep": True},
+    "lm_loss": {"lm_loss": True},
+    "lm_opt": {"moe_ep": True, "lm_loss": True, "remat_dots": True},
+    "lm_opt_nb": {"moe_ep": True, "lm_loss": True, "remat_dots": "dots_nb"},
+    "moe_sm": {"moe_sm": True, "lm_loss": True},
+    "moe_sm_dots": {"moe_sm": True, "lm_loss": True, "remat_dots": True},
+    "gnn_mem": {"gnn_remat": True, "gnn_shard_all": True},
+    "gnn_remat": {"gnn_remat": True},
+    "retr_shard": {"retrieval_sharded": True},
+    "masked_loss": {"masked_loss": True},
+    "opt": {"moe_ep": True, "lm_loss": True, "gnn_remat": True,
+            "gnn_shard_all": True, "retrieval_sharded": True,
+            "masked_loss": True},
+}
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh, depth=None,
+               unroll: bool = False, variant: str = "baseline") -> Cell:
+    """depth/unroll: cost-extrapolation variants (launch/dryrun.py) — XLA's
+    cost_analysis counts a scan body once, so the dry-run lowers unrolled
+    1- and 2-layer variants and extrapolates total = f1 + (L-1)*(f2-f1)."""
+    opts = VARIANTS[variant]
+    mod = cfg_registry.get(arch)
+    fam = mod.FAMILY
+    assert shape in mod.SHAPES, (arch, shape, mod.SHAPES)
+    if fam == "lm":
+        return _lm_cell(arch, shape, mesh, depth, unroll, opts)
+    if fam == "gnn":
+        return _gnn_cell(arch, shape, mesh, depth, unroll, opts)
+    return _recsys_cell(arch, shape, mesh, depth, unroll, opts)
+
+
+def cell_depth(arch: str) -> int:
+    """The layer-loop trip count of the arch's full config (1 = no loop)."""
+    mod = cfg_registry.get(arch)
+    if mod.FAMILY == "lm":
+        return mod.full_config().n_layers
+    if mod.FAMILY == "gnn":
+        return mod.full_config("full_graph_sm").n_blocks
+    cfg = mod.full_config()
+    return getattr(cfg, "n_blocks", 1) if cfg.kind in ("bst", "bert4rec") else 1

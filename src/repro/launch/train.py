@@ -1,0 +1,77 @@
+"""Training launcher: --arch <id> over the production (or test) mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 20 --batch 8 --seq 128
+
+On this CPU container only --smoke configs actually execute; full configs
+are exercised via the dry-run (launch/dryrun.py). On a real TPU fleet the
+same entry point runs the full config: the mesh/sharding/trainer paths are
+identical (that is the point of the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs as reg
+from repro.data.pipeline import Prefetcher, ctr_batches, lm_batches, seq_batches
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt", choices=("adamw", "adafactor"), default="adamw")
+    ap.add_argument("--ckpt", type=str, default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    mod = reg.get(args.arch)
+    cfg = mod.smoke_config() if args.smoke else (
+        mod.full_config("full_graph_sm") if mod.FAMILY == "gnn"
+        else mod.full_config())
+
+    if mod.FAMILY == "lm":
+        from repro.models import transformer as M
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        data = Prefetcher(lm_batches(cfg.vocab, args.batch, args.seq))
+        lfn = lambda p, b: M.loss_fn(p, b, cfg)
+    elif mod.FAMILY == "recsys":
+        from repro.models import recsys as M
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        if cfg.kind in ("fm", "deepfm"):
+            data = Prefetcher(ctr_batches(cfg.n_sparse, cfg.vocab_per_field,
+                                          args.batch))
+        else:
+            data = Prefetcher(seq_batches(cfg.kind, cfg.n_items, args.batch,
+                                          cfg.seq_len))
+        lfn = lambda p, b: M.loss_fn(p, b, cfg)
+    else:
+        from repro.data.pipeline import gnn_minibatches
+        from repro.models import dimenet as M
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        data = Prefetcher(gnn_minibatches(
+            n_nodes=2000, d_feat=cfg.d_feat, batch_nodes=args.batch,
+            fanouts=(5, 3), n_classes=cfg.n_out))
+        lfn = lambda p, b: M.loss_fn(p, b, cfg)
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={args.arch} family={mod.FAMILY} params={n_params/1e6:.2f}M")
+    trainer = Trainer(lfn, OptConfig(kind=args.opt, lr=args.lr),
+                      TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=25,
+                                    log_every=5))
+    trainer.install_signal_handler()
+    out = trainer.fit(params, data, n_steps=args.steps)
+    for h in out["history"]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

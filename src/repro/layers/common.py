@@ -1,0 +1,138 @@
+"""Shared NN building blocks (pure functions over param pytrees).
+
+Models in repro.models are pure JAX: params are nested dicts of arrays, all
+layers are functions. Sharding is NOT baked in here — launch/sharding map
+param-tree paths to PartitionSpecs (sharding/rules.py), keeping the model
+math mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, base: float = 10_000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float = 10_000.0,
+               rotary_frac: float = 1.0) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S).
+
+    rotary_frac < 1 rotates only the first rotary_frac*D dims (ChatGLM's
+    "2d" RoPE applies rotation to half the head dim, leaving the rest as
+    plain channels — rotary_frac=0.5).
+    """
+    D = x.shape[-1]
+    rd = int(D * rotary_frac)
+    rd -= rd % 2
+    xr, xp = x[..., :rd], x[..., rd:]
+    inv = rope_freqs(rd, base)                                    # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, rd/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, rd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < D else out
+
+
+# ------------------------------------------------------------ attention ----
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool, window: int = 0,
+                  q_offset: jnp.ndarray | int = 0,
+                  kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: (B, S, Hq, D); k, v: (B, T, Hkv, D) with Hq % Hkv == 0.
+    causal: apply causal mask with q positions offset by q_offset (decode).
+    window > 0: sliding-window attention (sub-quadratic memory per step
+    when combined with chunking; mask-based here).
+    kv_len: (B,) valid kv prefix length (decode with preallocated cache).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qf, kf) / jnp.sqrt(D)
+
+    # per-example query positions: (B, S)
+    off = jnp.broadcast_to(jnp.asarray(q_offset).reshape(-1, 1), (B, 1))
+    qpos = off + jnp.arange(S)[None, :]
+    kpos = jnp.arange(T)
+    mask = jnp.ones((B, S, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, None, :] <= qpos[:, :, None]
+    if window > 0:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, None, :] < kv_len[:, None, None]
+    mask = mask[:, None, None]                          # (B, 1, 1, S, T)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, vf)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- acts ----
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "tanh": jnp.tanh}[name]
+
+
+# ------------------------------------------------------------- embedbag ----
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  offsets_or_mask: jnp.ndarray, mode: str = "sum"
+                  ) -> jnp.ndarray:
+    """EmbeddingBag via take + masked reduce (JAX has no native op —
+    DESIGN.md: this IS part of the system, not a stub).
+
+    table: (V, D); ids: (B, A) int32 with -1 padding;
+    offsets_or_mask: (B, A) bool validity mask.
+    """
+    vecs = table[jnp.maximum(ids, 0)]                   # (B, A, D)
+    m = offsets_or_mask[..., None].astype(vecs.dtype)
+    s = jnp.sum(vecs * m, axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+        return s / cnt
+    if mode == "max":
+        neg = jnp.where(offsets_or_mask[..., None], vecs, -jnp.inf)
+        return jnp.max(neg, axis=1)
+    raise ValueError(mode)
+
+
+# ----------------------------------------------------------------- init ----
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)

@@ -1,0 +1,375 @@
+"""Decoder-only transformer LM (dense + MoE) covering the five assigned
+LM architectures (qwen2.5-14b, chatglm3-6b, gemma-2b, kimi-k2-1t-a32b,
+llama4-scout-17b-a16e).
+
+One parameterized implementation:
+  * GQA / MQA attention (n_kv_heads), optional QKV bias (qwen),
+    head_dim override (gemma 256), rotary_frac (chatglm 2-d RoPE = 0.5),
+    GeGLU vs SwiGLU vs plain MLP, optional sliding window,
+  * MoE layers with sort-based dispatch (kimi, llama4-scout),
+  * layers stacked + lax.scan'd (compact HLO at 61 layers) with optional
+    remat (activation checkpointing policy per arch),
+  * train path: full-sequence causal LM loss,
+  * serve path: single-token decode against a preallocated KV cache
+    (decode_* / long_* dry-run shapes).
+
+Params are plain dict trees; sharding/rules.py maps path -> PartitionSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as L
+from repro.layers.moe import MoEConfig, init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    act: str = "silu"            # mlp activation; "geglu" => gelu-gated
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    rotary_frac: float = 1.0     # chatglm "2d" rope = 0.5
+    rope_base: float = 10_000.0
+    tie_embeddings: bool = False
+    window: int = 0              # sliding-window attention (0 = full)
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1           # apply MoE on layers where i % moe_every == 0
+    remat: bool = True
+    remat_policy: str = "full"   # "full" | "dots": checkpoint_dots saves
+                                 # GEMM outputs, so the backward re-runs only
+                                 # pointwise ops — measured to remove the
+                                 # ~25% of per-layer collective bytes that
+                                 # full remat re-executes (EXPERIMENTS §Perf)
+    dtype: str = "bfloat16"      # params/activation dtype ("float32" on CPU tests)
+    unroll_layers: bool = False  # python-loop the layer stack (cost analysis:
+                                 # XLA counts a scan body once; see dryrun)
+    loss_vocab_axis: str = ""    # hillclimb: keep train logits bf16 AND
+                                 # vocab-sharded over this mesh axis; loss
+                                 # uses fused sharded reductions instead of
+                                 # materializing replicated f32 (B,S,V)
+    loss_batch_axes: tuple = ()  # mesh axes the batch dim stays sharded on
+                                 # in the loss (must accompany loss_vocab_axis
+                                 # or the logits become batch-replicated)
+    loss_vocab_shards: int = 0   # size of loss_vocab_axis (static, for the
+                                 # shard-blocked reshape of the loss)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- params ---
+def init_params(cfg: LMConfig, key) -> dict:
+    dt = cfg.param_dtype
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    d, hd = cfg.d_model, cfg.hd
+
+    def layer(k):
+        ks = jax.random.split(k, 8)
+        p = {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "wq": L.dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+            "wk": L.dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dt),
+            "wv": L.dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dt),
+            "wo": L.dense_init(ks[3], (cfg.n_heads * hd, d), dtype=dt),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+            p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+            p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        if cfg.moe is not None:
+            p["moe"] = init_moe(ks[4], d, cfg.moe, dtype=dt)
+        else:
+            p["w_in"] = L.dense_init(ks[5], (d, cfg.d_ff), dtype=dt)
+            if cfg.gated_mlp:
+                p["w_gate"] = L.dense_init(ks[6], (d, cfg.d_ff), dtype=dt)
+            p["w_out"] = L.dense_init(ks[7], (cfg.d_ff, d), dtype=dt)
+        return p
+
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(layer)(keys)          # stacked: every leaf (L, ...)
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab, d), scale=0.02, dtype=dt),
+        "layers": layers,
+        "ln_f": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, (d, cfg.vocab), dtype=dt)
+    return params
+
+
+# --------------------------------------------------------------- forward ---
+def _scan_layers(body, carry, stacked, cfg: LMConfig):
+    """lax.scan over the stacked layer params, or an unrolled python loop
+    (identical math; used by the dry-run's cost extrapolation)."""
+    if cfg.remat and cfg.remat_policy == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif cfg.remat and cfg.remat_policy == "dots_nb":
+        # save projection/attention GEMMs; recompute the (E, C, *) expert
+        # GEMMs (they carry a batch dim) — collective-vs-memory middle ground
+        body_fn = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat:
+        body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body_fn, carry, stacked)
+    ys = []
+    for i in range(cfg.n_layers):
+        layer = jax.tree.map(lambda x: x[i], stacked)
+        carry, y = body_fn(carry, layer)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _mlp(p: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    act = L.act_fn("gelu" if cfg.act == "geglu" else cfg.act)
+    h = x @ p["w_in"]
+    if cfg.gated_mlp:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["w_out"]
+
+
+def _attn(p: dict, x: jnp.ndarray, cfg: LMConfig, positions: jnp.ndarray,
+          cache_kv: Optional[Tuple] = None, kv_len=None):
+    """x: (B, S, d). cache_kv: (k_cache, v_cache) (B, T, Hkv, D) for decode."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    q = L.apply_rope(q, positions, cfg.rope_base, cfg.rotary_frac)
+    k = L.apply_rope(k, positions, cfg.rope_base, cfg.rotary_frac)
+
+    new_cache = None
+    if cache_kv is not None:
+        kc, vc = cache_kv                    # (B, T, Hkv, D)
+        # write the S new tokens at kv_len (decode: S == 1)
+        idx = kv_len[:, None] + jnp.arange(S)[None]               # (B, S)
+        bidx = jnp.arange(B)[:, None]
+        kc = kc.at[bidx, idx].set(k.astype(kc.dtype))
+        vc = vc.at[bidx, idx].set(v.astype(vc.dtype))
+        k, v = kc, vc
+        new_cache = (kc, vc)
+        out = L.gqa_attention(q, k, v, causal=True, window=cfg.window,
+                              q_offset=kv_len, kv_len=kv_len + S)
+    else:
+        out = L.gqa_attention(q, k, v, causal=True, window=cfg.window)
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"], new_cache
+
+
+def _block(p: dict, x: jnp.ndarray, cfg: LMConfig, positions, cache_kv=None,
+           kv_len=None):
+    h, new_cache = _attn(p, L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                         positions, cache_kv, kv_len)
+    x = x + h
+    hin = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        from repro.layers.moe import moe_ffn_shardmap
+        B, S, d = hin.shape
+        fn = moe_ffn_shardmap if cfg.moe.use_shardmap else moe_ffn
+        out, aux = fn(p["moe"], hin.reshape(B * S, d), cfg.moe)
+        out = out.reshape(B, S, d)
+    else:
+        out = _mlp(p, hin, cfg)
+    return x + out, aux, new_cache
+
+
+def forward_features(params: dict, tokens: jnp.ndarray, cfg: LMConfig
+                     ) -> Tuple:
+    """Backbone only: tokens (B, S) -> (final hidden (B, S, d), aux)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.param_dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)  # gemma
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a, _ = _block(layer_p, x, cfg, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = _scan_layers(body, (x, jnp.float32(0.0)),
+                               params["layers"], cfg)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), aux
+
+
+def _head(params: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T.astype(x.dtype)
+    return x @ params["unembed"]
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig) -> Tuple:
+    """Training forward. tokens: (B, S) -> (logits (B, S, V), aux_loss)."""
+    x, aux = forward_features(params, tokens, cfg)
+    return _head(params, x, cfg).astype(jnp.float32), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> Tuple:
+    """Causal LM loss. batch: {"tokens": (B, S+1) int32}.
+
+    With cfg.loss_vocab_axis set (hillclimb), the (B, S, V) logits stay
+    bf16 AND vocab-sharded; softmax statistics use fused reductions over
+    the sharded V (tiny (B, S) psums) and the target logit is extracted by
+    a fused select+reduce instead of a gather — the dry-run showed the
+    naive path forcing a replicated f32 (B, S, V) all-reduce (40 GiB at
+    kimi-k2 scale).
+    """
+    tokens = batch["tokens"]
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    if not cfg.loss_vocab_axis:
+        logits, aux = forward(params, inp, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll) + aux
+        return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+    from jax.sharding import PartitionSpec as P
+    x, aux = forward_features(params, inp, cfg)
+    bx0 = tuple(cfg.loss_batch_axes) or None
+    # features must enter the head with FULL d: a d-sharded input makes the
+    # head a contraction-sharded GEMM whose partial sums psum the full-V
+    # f32 logits (40 GiB/step observed); gathering (B, S, d) bf16 is ~40x
+    # cheaper.
+    x = jax.lax.with_sharding_constraint(x, P(bx0, None, None))
+    logits = _head(params, x, cfg)                    # bf16, (B, S, V)
+    B, S, V = logits.shape
+    n = max(cfg.loss_vocab_shards, 1)
+    bx = tuple(cfg.loss_batch_axes) or None
+    # shard-blocked softmax: reshape V into (n, V/n) pinned so block j
+    # lives on vocab-shard j — all O(V) reductions become LOCAL; only the
+    # (B, S, n) per-block statistics cross shards. (Leaving the layout to
+    # the partitioner was observed to replicate the f32 logits instead.)
+    lr = logits.reshape(B, S, n, V // n)
+    lr = jax.lax.with_sharding_constraint(
+        lr, P(bx, None, cfg.loss_vocab_axis, None))
+    lf = lr.astype(jnp.float32)
+    m_l = jnp.max(lf, axis=-1)                        # (B, S, n)
+    s_l = jnp.sum(jnp.exp(lf - m_l[..., None]), axis=-1)
+    m = jnp.max(m_l, axis=-1)                         # (B, S)
+    lse = m + jnp.log(jnp.sum(s_l * jnp.exp(m_l - m[..., None]), axis=-1))
+    # target logit: local select inside the owning block
+    iota = jax.lax.broadcasted_iota(jnp.int32, lr.shape, 3) \
+        + jax.lax.broadcasted_iota(jnp.int32, lr.shape, 2) * (V // n)
+    tgt_logit = jnp.sum(
+        jnp.where(iota == tgt[..., None, None], lf, 0.0), axis=(-1, -2))
+    nll = lse - tgt_logit
+    loss = jnp.mean(nll) + aux
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Inference prefill: full-sequence forward that also materializes the
+    KV cache (the prefill_32k dry-run shape). Returns (last-token logits,
+    cache sized exactly to S)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.param_dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, layer_p):
+        hd = cfg.hd
+        hin = L.rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        q = hin @ layer_p["wq"]
+        k = hin @ layer_p["wk"]
+        v = hin @ layer_p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + layer_p["bq"], k + layer_p["bk"], v + layer_p["bv"]
+        q = q.reshape(B, S, cfg.n_heads, hd)
+        k = k.reshape(B, S, cfg.n_kv_heads, hd)
+        v = v.reshape(B, S, cfg.n_kv_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_base, cfg.rotary_frac)
+        k = L.apply_rope(k, positions, cfg.rope_base, cfg.rotary_frac)
+        a = L.gqa_attention(q, k, v, causal=True, window=cfg.window)
+        x = x + a.reshape(B, S, cfg.n_heads * hd) @ layer_p["wo"]
+        hin = L.rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _ = moe_ffn(layer_p["moe"], hin.reshape(B * S, -1), cfg.moe)
+            out = out.reshape(B, S, -1)
+        else:
+            out = _mlp(layer_p, hin, cfg)
+        return x + out, (k.astype(cfg.param_dtype), v.astype(cfg.param_dtype))
+
+    x, (ks, vs) = _scan_layers(body, x, params["layers"], cfg)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["unembed"]
+    cache = {"k": ks, "v": vs,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits.astype(jnp.float32), cache
+
+
+# ----------------------------------------------------------------- decode --
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                cfg: LMConfig) -> Tuple[jnp.ndarray, dict]:
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), cache')."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.param_dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    positions = cache["len"][:, None] + jnp.arange(S)[None]
+
+    def body(carry, inputs):
+        x = carry
+        layer_p, kc, vc = inputs
+        x, _, new_cache = _block(layer_p, x, cfg, positions,
+                                 cache_kv=(kc, vc), kv_len=cache["len"])
+        return x, new_cache
+
+    # decode never remats (no backward); reuse the scan/unroll switch only
+    dec_cfg = dataclasses.replace(cfg, remat=False)
+    x, (k_new, v_new) = _scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]), dec_cfg)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["unembed"]
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + S}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop (DESIGN.md §4).
+
+Production posture on thousands of nodes requires, at minimum:
+  * periodic + signal-triggered checkpoints with atomic commit,
+  * automatic resume from the latest valid checkpoint,
+  * straggler detection (per-step wall-time EMA; in multi-host deployments
+    the hook triggers re-meshing, here it logs + counts),
+  * elastic re-mesh: a checkpoint written under mesh A restores under a
+    different mesh B (reshard-on-restore; see checkpoint.restore),
+  * failure injection for testing the above end-to-end.
+
+The Trainer is model-agnostic: it takes loss_fn(params, batch) -> (loss,
+metrics), an optimizer config, shardings for params/batch, and a data
+iterator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_mod
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    straggler_kappa: float = 2.5   # step > kappa * EMA => straggler
+    ema_alpha: float = 0.1
+    fail_at_step: int = -1         # failure injection (tests)
+    log_every: int = 10
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, opt_cfg: OptConfig,
+                 cfg: TrainerConfig, param_shardings=None,
+                 batch_shardings=None, donate: bool = True):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.cfg = cfg
+        self.ckpt = ckpt_mod.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_last)
+        self.straggler_steps = 0
+        self._ema = None
+        self._warm = None
+        self._stop = False
+
+        def step_fn(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            new_params, new_state, gnorm = opt_update(
+                grads, opt_state, params, self.opt_cfg)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_params, new_state, metrics
+
+        kwargs = {}
+        if param_shardings is not None:
+            kwargs["in_shardings"] = (param_shardings, None, batch_shardings)
+        if donate:
+            kwargs["donate_argnums"] = (0, 1)
+        self.step_fn = jax.jit(step_fn, **kwargs)
+
+    # ------------------------------------------------------------- signals
+    def install_signal_handler(self):
+        def handler(signum, frame):
+            self._stop = True   # checkpoint + exit at the next step boundary
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # --------------------------------------------------------------- train
+    def fit(self, params, data: Iterator, n_steps: int,
+            resume: bool = True) -> dict:
+        opt_state = opt_init(params, self.opt_cfg)
+        start = 0
+        if resume:
+            last = ckpt_mod.latest_step(self.cfg.ckpt_dir)
+            if last is not None:
+                state = ckpt_mod.restore(
+                    self.cfg.ckpt_dir, last,
+                    {"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                start = last
+        history = []
+        for step in range(start, n_steps):
+            if self._stop:
+                break
+            if step == self.cfg.fail_at_step:
+                # crash AFTER the last checkpoint, BEFORE saving this step:
+                # the restart path must recover.
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.perf_counter()   # includes data stalls: they ARE a
+            batch = next(data)         # straggler symptom at fleet scale
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._track_straggler(dt, step)
+            if step % self.cfg.log_every == 0:
+                history.append({"step": step,
+                                "loss": float(metrics["loss"]),
+                                "sec": dt})
+            if (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        self.ckpt.save(n_steps if not self._stop else step,
+                       {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return {"params": params, "opt": opt_state, "history": history,
+                "stragglers": self.straggler_steps}
+
+    def _track_straggler(self, dt: float, step: int) -> None:
+        if self._warm is None:
+            self._warm = True   # step 0 includes jit compile: never seed EMA
+            return
+        if self._ema is None:
+            self._ema = dt
+            return
+        if dt > self.cfg.straggler_kappa * self._ema:
+            self.straggler_steps += 1
+        a = self.cfg.ema_alpha
+        self._ema = (1 - a) * self._ema + a * dt
+
+
+def reshard_checkpoint(ckpt_dir: str, step: int, like_tree, new_shardings):
+    """Elastic re-mesh: restore a checkpoint under a different mesh."""
+    return ckpt_mod.restore(ckpt_dir, step, like_tree, new_shardings)

@@ -1,0 +1,132 @@
+"""Optimizers (no external deps — optax is not vendored here).
+
+AdamW and Adafactor over pytrees, plus ZeRO-1 moment shardings. Adafactor's
+factored second moment is what makes the 1T-param kimi-k2 cell fit: moments
+for an (E, d, f) expert weight collapse from E*d*f to E*(d + f) floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999            # adafactor: decay exponent handled below
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    min_dim_factored: int = 2    # factor second moment for >=2-D params
+
+
+# ------------------------------------------------------------------ AdamW --
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def _clip(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(grads, state, params, cfg: OptConfig):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+    c = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": c}, gnorm
+
+
+# -------------------------------------------------------------- Adafactor --
+def _factored(shape, cfg: OptConfig) -> bool:
+    return len(shape) >= cfg.min_dim_factored
+
+
+def adafactor_init(params, cfg: OptConfig = OptConfig(kind="adafactor")):
+    def init(p):
+        if _factored(p.shape, cfg):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: OptConfig):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+    c = state["count"] + 1
+    # time-dependent decay (Shazeer & Stern): beta2_t = 1 - t^-0.8
+    b2t = 1.0 - jnp.power(c.astype(jnp.float32), -0.8)
+
+    def upd(p, g, v):
+        g2 = g * g + 1e-30
+        if _factored(p.shape, cfg):
+            vr = b2t * v["vr"] + (1 - b2t) * jnp.mean(g2, axis=-1)
+            vc = b2t * v["vc"] + (1 - b2t) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            pre = jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+            step = g / jnp.maximum(pre, cfg.eps)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = b2t * v["v"] + (1 - b2t) * g2
+            step = g / (jnp.sqrt(vv) + cfg.eps)
+            new_v = {"v": vv}
+        # update clipping (RMS <= 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * step).astype(p.dtype), new_v
+
+    # params/grads leaves are arrays; state["v"] has params as a tree-prefix
+    # (each param leaf maps to a {"v"} or {"vr","vc"} dict), which tree_map
+    # passes through whole.
+    flat = jax.tree_util.tree_map(upd, params, grads, state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"v": new_v, "count": c}, gnorm
+
+
+# ---------------------------------------------------------------- facade ---
+def opt_init(params, cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return adamw_init(params)
+    return adafactor_init(params, cfg)
+
+
+def opt_update(grads, state, params, cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return adamw_update(grads, state, params, cfg)
+    return adafactor_update(grads, state, params, cfg)

@@ -1,0 +1,143 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture at a
+reduced config runs one forward/train step on CPU — shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as reg
+
+LM_ARCHS = ["qwen2_5_14b", "chatglm3_6b", "gemma_2b", "kimi_k2_1t_a32b",
+            "llama4_scout_17b_a16e"]
+RECSYS_ARCHS = ["deepfm", "fm", "bst", "bert4rec"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    from repro.models import transformer as T
+    cfg = reg.get(arch).smoke_config()
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)
+    # train step: loss + grads finite
+    (loss, metrics), grads = jax.value_and_grad(
+        T.loss_fn, has_aux=True)(p, {"tokens": toks}, cfg)
+    assert jnp.isfinite(loss), arch
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gn) and gn > 0
+    # forward logits shape
+    logits, _ = T.forward(p, toks[:, :-1], cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # decode step
+    cache = T.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    lg, cache = T.decode_step(p, cache, toks[:, :1], cfg)
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert int(cache["len"][0]) == 1
+    # prefill
+    lg2, cache2 = T.prefill(p, toks[:, :8], cfg)
+    assert cache2["k"].shape[2] == 8 and lg2.shape[0] == 2
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models import recsys as R
+    cfg = reg.get(arch).smoke_config()
+    p = R.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    B = 4
+    if cfg.kind in ("fm", "deepfm"):
+        batch = {"sparse_ids": jax.random.randint(
+            key, (B, cfg.n_sparse), 0, cfg.vocab_per_field),
+            "label": jnp.ones((B,), jnp.float32)}
+    elif cfg.kind == "bst":
+        batch = {"hist": jax.random.randint(key, (B, cfg.seq_len), 0, cfg.n_items),
+                 "target": jax.random.randint(key, (B,), 0, cfg.n_items),
+                 "label": jnp.ones((B,), jnp.float32)}
+    else:
+        batch = {"seq": jax.random.randint(key, (B, cfg.seq_len), 0, cfg.n_items),
+                 "labels": jax.random.randint(key, (B, cfg.seq_len), -1, cfg.n_items)}
+    (loss, _), grads = jax.value_and_grad(
+        R.loss_fn, has_aux=True)(p, batch, cfg)
+    assert jnp.isfinite(loss)
+    # serve + retrieval paths
+    sb = dict(batch)
+    if cfg.kind == "bert4rec":
+        sb["cand"] = jax.random.randint(key, (B,), 0, cfg.n_items)
+    out = R.serve_step(p, sb, cfg)
+    assert out.shape[0] == B and bool(jnp.all(jnp.isfinite(out)))
+    d, i = R.serve_retrieval(p, batch, cfg, k=5)
+    assert i.shape == (B, 5) and bool(jnp.all(i >= 0))
+
+
+def test_gnn_smoke():
+    from repro.data.pipeline import gnn_minibatches
+    from repro.models import dimenet as D
+    cfg = reg.get("dimenet").smoke_config()
+    p = D.init_params(cfg, jax.random.PRNGKey(0))
+    it = gnn_minibatches(n_nodes=500, d_feat=cfg.d_feat, batch_nodes=8,
+                         fanouts=(3, 2), n_classes=cfg.n_out, triplet_cap=4)
+    batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+    (loss, _), grads = jax.value_and_grad(
+        D.loss_fn, has_aux=True)(p, batch, cfg)
+    assert jnp.isfinite(loss)
+    out = D.forward(p, batch, cfg)
+    assert out.shape == (batch["feats"].shape[0], cfg.n_out)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_gnn_molecule_smoke():
+    from repro.data.pipeline import molecule_batches
+    from repro.models import dimenet as D
+    import dataclasses
+    cfg = dataclasses.replace(reg.get("dimenet").smoke_config(),
+                              task="graph_reg", n_out=1)
+    p = D.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in
+             next(molecule_batches(n_atoms=6, n_edges=12, batch=4,
+                                   d_feat=cfg.d_feat)).items()}
+    loss, _ = D.loss_fn(p, batch, cfg, n_graphs=4)
+    assert jnp.isfinite(loss)
+
+
+def test_all_archs_have_full_configs():
+    for arch in reg.ARCHS:
+        mod = reg.get(arch)
+        assert mod.FAMILY in ("lm", "gnn", "recsys")
+        assert len(mod.SHAPES) == 4
+        if mod.FAMILY == "gnn":
+            cfg = mod.full_config("full_graph_sm")
+        else:
+            cfg = mod.full_config()
+        assert cfg is not None
+
+
+def test_assigned_hyperparameters_exact():
+    """The full configs must match the assignment table exactly."""
+    q = reg.get("qwen2_5_14b").full_config()
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab, q.qkv_bias) == (48, 5120, 40, 8, 13824, 152064, True)
+    c = reg.get("chatglm3_6b").full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.rotary_frac) == (28, 4096, 32, 2, 13696, 65024, 0.5)
+    g = reg.get("gemma_2b").full_config()
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab, g.head_dim) == (18, 2048, 8, 1, 16384, 256000, 256)
+    k = reg.get("kimi_k2_1t_a32b").full_config()
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads, k.vocab,
+            k.moe.n_experts, k.moe.top_k) == (61, 7168, 64, 8, 163840, 384, 8)
+    l = reg.get("llama4_scout_17b_a16e").full_config()
+    assert (l.n_layers, l.d_model, l.n_heads, l.n_kv_heads, l.d_ff, l.vocab,
+            l.moe.n_experts, l.moe.top_k) == (48, 5120, 40, 8, 8192, 202048, 16, 1)
+    d = reg.get("dimenet").full_config("full_graph_sm")
+    assert (d.n_blocks, d.d_hidden, d.n_bilinear, d.n_spherical,
+            d.n_radial) == (6, 128, 8, 7, 6)
+    df = reg.get("deepfm").full_config()
+    assert (df.n_sparse, df.embed_dim, df.mlp_dims) == (39, 10, (400, 400, 400))
+    b4 = reg.get("bert4rec").full_config()
+    assert (b4.d_model, b4.n_blocks, b4.n_heads, b4.seq_len) == (64, 2, 2, 200)
+    bs = reg.get("bst").full_config()
+    assert (bs.d_model, bs.seq_len, bs.n_blocks, bs.n_heads,
+            bs.mlp_dims) == (32, 20, 1, 8, (1024, 512, 256))
+    f = reg.get("fm").full_config()
+    assert (f.n_sparse, f.embed_dim) == (39, 10)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queue as qmod
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk_queue(dists, ids, visited):
+    order = np.argsort(dists, kind="stable")
+    return qmod.Queue(jnp.asarray(dists[order], jnp.float32),
+                      jnp.asarray(ids[order], jnp.int32),
+                      jnp.asarray(visited[order]))
+
+
+@given(st.integers(2, 24), st.integers(1, 16), st.integers(0, 2 ** 30))
+def test_merge_insert_invariants(L, M, seed):
+    r = np.random.default_rng(seed)
+    n_filled = r.integers(0, L + 1)
+    dists = np.full(L, np.inf, np.float32)
+    ids = np.full(L, -1, np.int64)
+    dists[:n_filled] = r.normal(size=n_filled).astype(np.float32)
+    ids[:n_filled] = r.choice(10_000, size=n_filled, replace=False)
+    vis = np.ones(L, bool)
+    vis[:n_filled] = r.random(n_filled) < 0.5
+    q = _mk_queue(dists, ids, vis)
+
+    nd = r.normal(size=M).astype(np.float32)
+    ni = r.integers(-1, 10_000, size=M).astype(np.int32)
+    out, best_rank, n_ins = qmod.merge_insert(q, jnp.asarray(nd),
+                                              jnp.asarray(ni))
+    od, oi = np.asarray(out.dists), np.asarray(out.ids)
+    # sorted ascending (comparison, not diff: inf - inf would be nan)
+    assert np.all(od[:-1] <= od[1:])
+    # no duplicate valid ids
+    valid = oi[oi >= 0]
+    assert len(valid) == len(set(valid.tolist()))
+    # best_rank within [0, L]
+    assert 0 <= int(best_rank) <= L
+    # the best surviving entry is no worse than before
+    assert od[0] <= np.asarray(q.dists)[0] + 1e-6
+
+
+@given(st.integers(4, 64), st.integers(0, 2 ** 30))
+def test_merge_idempotent_on_duplicates(L, seed):
+    """Re-inserting the queue's own content must change nothing."""
+    r = np.random.default_rng(seed)
+    dists = np.sort(r.normal(size=L).astype(np.float32))
+    ids = r.choice(100_000, size=L, replace=False).astype(np.int64)
+    q = _mk_queue(dists, ids, np.zeros(L, bool))
+    out, best_rank, _ = qmod.merge_insert(
+        q, jnp.asarray(dists), jnp.asarray(ids.astype(np.int32)))
+    assert np.array_equal(np.asarray(out.ids), np.asarray(q.ids))
+    assert int(best_rank) == L     # nothing inserted => rank L (beyond all)
+
+
+@given(st.integers(2, 8), st.integers(16, 64), st.integers(0, 2 ** 30))
+def test_pq_reconstruction_bound(m, n, seed):
+    """PQ quantization error must be bounded by per-subspace k-means
+    radius; ADC distance of a vector to itself <= 4 * reconstruction."""
+    from repro.core.quantize import (PQState, pq_encode, pq_query_tables,
+                                     pq_train)
+    from repro.core.types import QuantConfig
+    r = np.random.default_rng(seed)
+    d = m * 4
+    x = jnp.asarray(r.normal(size=(max(n, 300), d)).astype(np.float32))
+    st_ = pq_train(x, QuantConfig(kind="pq", pq_m=m, kmeans_iters=4))
+    codes = pq_encode(st_.codebooks, x)
+    lut = pq_query_tables(st_.codebooks, x[:4], "l2")
+    from repro.kernels.ref import pq_adc_ref
+    self_ids = jnp.arange(4, dtype=jnp.int32)[:, None]
+    d_self = np.asarray(pq_adc_ref(
+        lut.reshape(4, m, 256), codes, self_ids))[:, 0]
+    # ADC(x, x) == ||x - x_hat||^2 — reconstruction error, must be finite
+    # and far below the typical inter-point distance (~2d for N(0,1)).
+    assert np.all(np.isfinite(d_self))
+    assert np.all(d_self < 2 * d)
+
+
+@given(st.integers(30, 200), st.integers(0, 2 ** 30))
+def test_reorder_is_permutation(n, seed):
+    from repro.core.reorder import apply_order, mst_reorder
+    r = np.random.default_rng(seed)
+    M = 4
+    graph = r.integers(-1, n, size=(n, M)).astype(np.int32)
+    w = r.random((n, M)).astype(np.float32)
+    order = mst_reorder(graph, w, entry=0)
+    assert sorted(order.tolist()) == list(range(n))
+    db = r.normal(size=(n, 8)).astype(np.float32)
+    db2, g2, new_of_old = apply_order(order, db, graph)
+    # vector rows follow their ids
+    np.testing.assert_array_equal(db2, db[order])
+    # edges are preserved under relabeling
+    for u_new in range(min(10, n)):
+        u_old = order[u_new]
+        olds = set(v for v in graph[u_old] if v >= 0)
+        news = set(int(new_of_old[v]) for v in olds)
+        assert set(v for v in g2[u_new] if v >= 0) == news
+
+
+@given(st.integers(0, 2 ** 30))
+def test_sq_roundtrip_error(seed):
+    from repro.core.quantize import SQState, sq_encode, sq_train
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(200, 16)).astype(np.float32) * 5)
+    stq = sq_train(x)
+    codes = sq_encode(stq, x)
+    dec = np.asarray(codes).astype(np.float32) * np.asarray(stq.scale) \
+        + np.asarray(stq.zero)
+    err = np.abs(dec - np.asarray(x))
+    # max error is half a quantization bin per dim
+    assert np.all(err <= np.asarray(stq.scale) * 0.5 + 1e-5)
+
+
+@given(st.integers(8, 40), st.integers(2, 6), st.integers(0, 2 ** 30))
+def test_refine_degree_bound(n, M, seed):
+    from repro.core.build import brute_force_knn
+    from repro.core.refine import refine_graph
+    r = np.random.default_rng(seed)
+    db = jnp.asarray(r.normal(size=(n, 8)).astype(np.float32))
+    k = min(n - 1, 2 * M)
+    ids, dd = brute_force_knn(db, k, "l2", chunk=16)
+    g = refine_graph(db, ids, dd, M=M, rule="alpha", metric="l2", alpha=1.2,
+                     ssg_angle_deg=60, iters=1, cand_cap=3 * M, entry=0,
+                     search_L=8, search_passes=1, node_chunk=16)
+    assert g.shape == (n, M)
+    # no self edges, ids in range
+    assert np.all(g < n)
+    for u in range(n):
+        assert u not in set(g[u][g[u] >= 0].tolist())

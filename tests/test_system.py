@@ -1,0 +1,106 @@
+"""End-to-end behaviour of the KBest system (paper Algorithm 1 + §3)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.types import SearchConfig
+from repro.data.vectors import recall_at_k
+
+
+def test_recall_deep(deep_index, deep_ds):
+    s = SearchConfig(L=64, k=10, early_term=False)
+    d, i = deep_index.search(deep_ds.queries, k=10, search_cfg=s)
+    assert recall_at_k(np.asarray(i), deep_ds.gt_ids, 10) >= 0.95
+
+
+def test_recall_bigann(bigann_index, bigann_ds):
+    s = SearchConfig(L=128, k=10, early_term=False)
+    d, i = bigann_index.search(bigann_ds.queries, k=10, search_cfg=s)
+    assert recall_at_k(np.asarray(i), bigann_ds.gt_ids, 10) >= 0.9
+
+
+def test_larger_L_no_worse(deep_index, deep_ds):
+    rs = []
+    for L in (16, 48, 96):
+        s = SearchConfig(L=L, k=10, early_term=False)
+        _, i = deep_index.search(deep_ds.queries, k=10, search_cfg=s)
+        rs.append(recall_at_k(np.asarray(i), deep_ds.gt_ids, 10))
+    assert rs[0] <= rs[1] + 0.02 and rs[1] <= rs[2] + 0.02, rs
+
+
+def test_results_sorted_and_valid(deep_index, deep_ds):
+    s = SearchConfig(L=48, k=10, early_term=False)
+    d, i = deep_index.search(deep_ds.queries, k=10, search_cfg=s)
+    d, i = np.asarray(d), np.asarray(i)
+    assert np.all(np.diff(d, axis=1) >= -1e-6), "distances not sorted"
+    assert np.all(i >= 0) and np.all(i < deep_ds.base.shape[0])
+    # returned dists match true distances of returned ids
+    for q in range(5):
+        vecs = deep_ds.base[i[q]]
+        true = -(vecs @ deep_ds.queries[q])
+        np.testing.assert_allclose(d[q], true, rtol=1e-4, atol=1e-4)
+
+
+def test_early_termination_saves_hops(deep_index, deep_ds):
+    base = SearchConfig(L=64, k=10, early_term=False)
+    et = dataclasses.replace(base, early_term=True, et_patience=12)
+    _, i0, st0 = deep_index.search(deep_ds.queries, search_cfg=base,
+                                   with_stats=True)
+    _, i1, st1 = deep_index.search(deep_ds.queries, search_cfg=et,
+                                   with_stats=True)
+    r0 = recall_at_k(np.asarray(i0), deep_ds.gt_ids, 10)
+    r1 = recall_at_k(np.asarray(i1), deep_ds.gt_ids, 10)
+    assert np.asarray(st1.n_hops).mean() <= np.asarray(st0.n_hops).mean()
+    assert r1 >= r0 - 0.08, (r0, r1)   # bounded recall cost
+
+
+def test_early_term_infinite_patience_never_fires(deep_index, deep_ds):
+    s = SearchConfig(L=32, k=10, early_term=True, et_patience=10_000)
+    _, _, st = deep_index.search(deep_ds.queries, search_cfg=s,
+                                 with_stats=True)
+    assert not np.asarray(st.early_terminated).any()
+
+
+def test_bitmap_mode_fewer_dists_same_recall(deep_index, deep_ds):
+    sq = SearchConfig(L=48, k=10, early_term=False, visited_mode="queue")
+    sb = dataclasses.replace(sq, visited_mode="bitmap")
+    _, iq, stq = deep_index.search(deep_ds.queries, search_cfg=sq,
+                                   with_stats=True)
+    _, ib, stb = deep_index.search(deep_ds.queries, search_cfg=sb,
+                                   with_stats=True)
+    rq = recall_at_k(np.asarray(iq), deep_ds.gt_ids, 10)
+    rb = recall_at_k(np.asarray(ib), deep_ds.gt_ids, 10)
+    assert np.asarray(stb.n_dist).mean() <= np.asarray(stq.n_dist).mean()
+    assert abs(rq - rb) < 0.08, (rq, rb)
+
+
+def test_kernel_dist_path_matches_ref(deep_index, deep_ds):
+    sref = SearchConfig(L=48, k=10, early_term=False, dist_impl="ref")
+    sker = dataclasses.replace(sref, dist_impl="kernel")
+    _, i0 = deep_index.search(deep_ds.queries, search_cfg=sref)
+    _, i1 = deep_index.search(deep_ds.queries, search_cfg=sker)
+    # identical traversal => identical results
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_save_load_roundtrip(tmp_path, deep_index, deep_ds):
+    from repro.core.index import KBest
+    p = str(tmp_path / "idx.npz")
+    deep_index.save(p)
+    idx2 = KBest.load(p)
+    s = SearchConfig(L=48, k=10, early_term=False)
+    _, i0 = deep_index.search(deep_ds.queries, search_cfg=s)
+    _, i1 = idx2.search(deep_ds.queries, search_cfg=s)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_et_tuner_improves_hops(deep_index, deep_ds):
+    from repro.core.tune import tune_early_term
+    base = SearchConfig(L=64, k=10, early_term=False)
+    tuned = tune_early_term(deep_index, deep_ds.queries[:20],
+                            deep_ds.gt_ids[:20], base, recall_target=0.95,
+                            patience_hi=32)
+    _, i, st = deep_index.search(deep_ds.queries, search_cfg=tuned,
+                                 with_stats=True)
+    assert recall_at_k(np.asarray(i), deep_ds.gt_ids, 10) >= 0.85

@@ -1,0 +1,148 @@
+"""Training substrate: optimizer correctness, loss descent, checkpointing,
+fault tolerance, elastic reshard, gradient compression."""
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import Prefetcher, lm_batches
+from repro.models.transformer import LMConfig, init_params, loss_fn
+from repro.train import checkpoint as ck
+from repro.train.loop import SimulatedFailure, Trainer, TrainerConfig
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+TINY = LMConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                d_ff=128, vocab=128, dtype="float32", remat=False)
+
+
+def _lfn(params, batch):
+    return loss_fn(params, batch, TINY)
+
+
+def test_adamw_decreases_quadratic():
+    cfg = OptConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.ones((4,)) * 5.0}
+    state = opt_init(params, cfg)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = opt_update(g, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_adafactor_decreases_quadratic():
+    cfg = OptConfig(kind="adafactor", lr=0.3, weight_decay=0.0)
+    params = {"w": jnp.ones((8, 4)) * 5.0}
+    state = opt_init(params, cfg)
+    for _ in range(80):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = opt_update(g, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+    # factored: second moment is rank-1 (vr + vc), much smaller than w
+    v = state["v"]["w"]
+    assert set(v.keys()) == {"vr", "vc"}
+    assert v["vr"].shape == (8,) and v["vc"].shape == (4,)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    p = init_params(TINY, jax.random.PRNGKey(0))
+    tr = Trainer(_lfn, OptConfig(lr=1e-3),
+                 TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                               log_every=5))
+    out = tr.fit(p, Prefetcher(lm_batches(128, 8, 32)), n_steps=40)
+    h = out["history"]
+    assert h[-1]["loss"] < h[0]["loss"] - 0.2, h
+
+
+def test_failure_injection_and_resume(tmp_path):
+    p0 = init_params(TINY, jax.random.PRNGKey(0))
+    tc = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=10, fail_at_step=17)
+    tr = Trainer(_lfn, OptConfig(lr=1e-3), tc)
+    with pytest.raises(SimulatedFailure):
+        tr.fit(p0, Prefetcher(lm_batches(128, 8, 32)), n_steps=30)
+    # restart resumes from step 10, not step 0
+    tr2 = Trainer(_lfn, OptConfig(lr=1e-3),
+                  TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=10))
+    out = tr2.fit(init_params(TINY, jax.random.PRNGKey(0)),
+                  Prefetcher(lm_batches(128, 8, 32)), n_steps=30)
+    assert out["history"][0]["step"] == 10
+
+
+def test_checkpoint_atomic_and_pruned(tmp_path):
+    tree = {"a": np.arange(10.0), "b": {"c": np.ones((3, 3))}}
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, tree, keep_last=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    import pathlib
+    kept = sorted(pathlib.Path(tmp_path).glob("step_*"))
+    assert len(kept) == 2
+    back = ck.restore(str(tmp_path), 5, tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    np.testing.assert_array_equal(back["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_bit_exact_roundtrip(tmp_path):
+    p = init_params(TINY, jax.random.PRNGKey(3))
+    opt = opt_init(p, OptConfig())
+    ck.save(str(tmp_path), 7, {"params": p, "opt": opt})
+    back = ck.restore(str(tmp_path), 7, {"params": p, "opt": opt})
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(back["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint written with one sharding restores under another mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    p = init_params(TINY, jax.random.PRNGKey(0))
+    ck.save(str(tmp_path), 1, {"params": p})
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), p)
+    back = ck.restore(str(tmp_path), 1, {"params": p}, {"params": sh})
+    leaf = jax.tree.leaves(back["params"])[0]
+    assert leaf.sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+def test_grad_compression_error_feedback_converges():
+    """EF-int8 compressed updates reach the same optimum on a quadratic."""
+    from repro.train.compress import compress_decompress, init_residual
+    w = jnp.ones((16,)) * 3.0
+    res = init_residual({"w": w})
+    lr = 0.05
+    for _ in range(300):
+        g = {"w": 2 * w}
+        gq, res = compress_decompress(g, res)
+        w = w - lr * gq["w"]
+    assert float(jnp.abs(w).max()) < 1e-2
+
+
+def test_grad_compression_bounded_error():
+    from repro.train.compress import compress_decompress, init_residual
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    res = init_residual(g)
+    gq, res2 = compress_decompress(g, res)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    err = np.abs(np.asarray(gq["w"] - g["w"]))
+    assert err.max() <= scale * 0.5 + 1e-6  # half-bin quantization error
+    np.testing.assert_allclose(np.asarray(res2["w"]),
+                               np.asarray(g["w"] - gq["w"]), rtol=1e-6)
+
+
+def test_straggler_detection(tmp_path):
+    import time
+    p = init_params(TINY, jax.random.PRNGKey(0))
+    tr = Trainer(_lfn, OptConfig(lr=1e-3),
+                 TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=1000,
+                               straggler_kappa=1.5))
+    slow = {"n": 0}
+    base = lm_batches(128, 8, 32)
+
+    def gen():
+        for i, b in enumerate(base):
+            if i == 12:
+                time.sleep(1.0)   # inject a straggler step
+            yield b
+    out = tr.fit(p, gen(), n_steps=16)
+    assert out["stragglers"] >= 1
