@@ -8,6 +8,11 @@ different GRAPH CONSTRUCTION — exactly the axis the paper varies):
   kbest        : vamana-style + 2-hop iterative refinement (A1) + MST
                  reorder (A2); searched with tuned early termination (A3)
 
+The IVF-PQ family (DESIGN.md §4) rides the same harness as a fifth variant:
+its knob is nprobe (probed clusters) instead of L, and its cost driver is
+scanned PQ codes (~m byte-reads each) instead of full-precision distances,
+so its `dists_per_query` column counts scanned codes + re-ranked exacts.
+
 Wall-clock on this container is CPU-interpreted JAX, so absolute QPS is
 meaningless; the table reports (a) per-query distance computations (the
 hardware-independent cost driver: QPS ∝ 1/dists at fixed hardware) and
@@ -21,7 +26,8 @@ import time
 import numpy as np
 
 from repro.core.index import KBest
-from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
 from repro.data.vectors import ALL_DATASETS, make_dataset, recall_at_k
 
 VARIANTS = {
@@ -36,6 +42,37 @@ VARIANTS = {
 }
 
 
+# pq_m per dataset dim (must divide it); nprobe plays the role of L
+IVF_PQ_M = {"glove_like": 20, "deep_like": 16, "t2i_like": 20,
+            "bigann_like": 16}
+
+
+def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32)) -> list:
+    """The IVF-PQ rows: build once, sweep nprobe (the recall/cost knob)."""
+    cfg = IndexConfig(
+        dim=ds.base.shape[1], metric=ds.metric, index_type="ivf",
+        ivf=IVFConfig(nlist=0, kmeans_iters=8),
+        quant=QuantConfig(kind="pq", pq_m=IVF_PQ_M[ds.name], kmeans_iters=6),
+        search=SearchConfig(L=128, k=k, nprobe=8))
+    idx = KBest(cfg).add(ds.base)
+    rows = []
+    for nprobe in nprobes:
+        s = dataclasses.replace(cfg.search, nprobe=nprobe)
+        idx.search(ds.queries[:8], search_cfg=s, with_stats=True)
+        t0 = time.perf_counter()
+        d, i, st = idx.search(ds.queries, search_cfg=s, with_stats=True)
+        np.asarray(d)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "dataset": ds.name, "variant": "ivf-pq", "L": nprobe,
+            "recall": recall_at_k(np.asarray(i), ds.gt_ids, k),
+            "dists_per_query": float(np.asarray(st.n_dist).mean()),
+            "hops_per_query": float(np.asarray(st.n_hops).mean()),
+            "qps_cpu": ds.queries.shape[0] / dt,
+        })
+    return rows
+
+
 def run(n: int = 4000, n_queries: int = 100, k: int = 10,
         Ls=(32, 64, 128, 192, 256), quick: bool = False):
     if quick:
@@ -43,6 +80,8 @@ def run(n: int = 4000, n_queries: int = 100, k: int = 10,
     rows = []
     for ds_name in ALL_DATASETS:
         ds = make_dataset(ds_name, n=n, n_queries=n_queries, k=k)
+        rows.extend(run_ivf(ds, k, nprobes=(4, 8, 16) if quick
+                            else (4, 8, 16, 32)))
         for variant, bkw in VARIANTS.items():
             cfg = IndexConfig(
                 dim=ds.base.shape[1], metric=ds.metric,
@@ -97,7 +136,7 @@ def main(quick=False):
     best = qps_at_recall(rows, 0.9)
     for ds in ALL_DATASETS:
         line = [f"{ds:12s}"]
-        for v in VARIANTS:
+        for v in list(VARIANTS) + ["ivf-pq"]:
             e = best.get((ds, v))
             line.append(f"{v}={1e3*e[0]:.2f}" if e else f"{v}=n/a")
         print("  ".join(line))

@@ -4,7 +4,8 @@
 
 Sections:
   [qps_recall]  paper Fig. 6 / Table 4 — QPS-recall curves, 4 datasets,
-                4 build variants (baselines implemented in-framework)
+                4 graph build variants (baselines implemented in-framework)
+                + the IVF-PQ family swept over nprobe
   [ablation]    paper Fig. 7 — Base -> +Index -> +EarlyTerm -> +SIMD ->
                 +Prefetch
   [scaling]     paper §5.2 — corpus-size sweep + sharded search

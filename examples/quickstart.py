@@ -1,11 +1,12 @@
-"""Quickstart: build a KBest index, search it, save/load.
+"""Quickstart: build a KBest index (both families), search it, save/load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core.index import KBest
-from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
 from repro.data.vectors import make_dataset, recall_at_k
 
 
@@ -38,6 +39,25 @@ def main():
     index2 = KBest.load("/tmp/kbest_quickstart.npz")
     d2, i2 = index2.search(ds.queries[:5], k=10)
     print("reloaded index answers:", np.asarray(i2)[0][:5], "...")
+
+    # 6. the partition-based sibling: IVF-PQ behind the same facade
+    #    (k-means coarse quantizer + residual PQ + exact re-rank)
+    ivf_config = IndexConfig(
+        dim=ds.base.shape[1], metric="l2", index_type="ivf",
+        ivf=IVFConfig(nlist=0, kmeans_iters=8),       # nlist=0 => sqrt(n)
+        quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=6),
+        search=SearchConfig(L=128, k=10, nprobe=16),
+    )
+    ivf_index = KBest(ivf_config).add(ds.base)
+    dists, ids, stats = ivf_index.search(ds.queries, k=10, with_stats=True)
+    rec = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    print(f"ivf recall@10      = {rec:.3f}")
+    print(f"ivf codes scanned  = {float(np.asarray(stats.n_dist).mean()):.0f}/query")
+
+    ivf_index.save("/tmp/kbest_quickstart_ivf.npz")
+    ivf2 = KBest.load("/tmp/kbest_quickstart_ivf.npz")
+    d3, i3 = ivf2.search(ds.queries[:5], k=10)
+    print("reloaded ivf answers:", np.asarray(i3)[0][:5], "...")
 
 
 if __name__ == "__main__":

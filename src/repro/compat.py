@@ -1,0 +1,39 @@
+"""Portability shims for jax APIs that moved between 0.4.x and newer jax.
+
+The code targets the current jax surface (jax.shard_map / jax.set_mesh);
+these wrappers let the same call sites run on older lines, where shard_map
+lives in jax.experimental and/or still takes check_rep instead of
+check_vma. See also launch/mesh.py: mesh_context for set_mesh.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def shard_map(f, **kwargs):
+    """jax.shard_map where available, else the jax.experimental fallback.
+
+    Kwarg translation is keyed on the resolved function's signature, not
+    the jax version: the ~0.5-0.6 window exposes top-level jax.shard_map
+    that still takes check_rep.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    params = inspect.signature(fn).parameters
+    if "check_vma" in kwargs and "check_vma" not in params:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if kwargs.get("mesh") is None and not hasattr(jax, "set_mesh"):
+        # pre-set_mesh jax requires an explicit mesh; recover the ambient
+        # one (activated by mesh_context's `with mesh:`) from the
+        # resource env
+        from jax._src import mesh as _mesh_lib
+        env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty:
+            raise ValueError(
+                "shard_map without mesh= needs an active mesh context "
+                "(launch.mesh.mesh_context) on this jax version")
+        kwargs["mesh"] = env_mesh
+    return fn(f, **kwargs)

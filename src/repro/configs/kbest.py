@@ -2,9 +2,15 @@
 evaluation dataset (paper Table 3/4), exposed like the arch configs.
 
     from repro.configs import kbest
-    cfg = kbest.index_config("bigann_like")
+    cfg = kbest.index_config("bigann_like")            # graph index
+    cfg = kbest.ivf_index_config("bigann_like")        # IVF-PQ index
+
+Graph presets tune the build/search pipeline of DESIGN.md §3; the IVF
+presets (DESIGN.md §4) tune (nlist auto, nprobe, pq_m) to reach
+recall@10 >= 0.90 on the 50k synthetic analogues with full-queue re-rank.
 """
-from repro.core.types import BuildConfig, IndexConfig, QuantConfig, SearchConfig
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
 
 ARCH_ID = "kbest"
 FAMILY = "anns"
@@ -40,8 +46,27 @@ _CONFIGS = {
 }
 
 
+# IVF-PQ presets: pq_m must divide dim; nprobe/L tuned for the re-ranked
+# pipeline (candidate recall == final recall with rerank=0 => full queue).
+_IVF_CONFIGS = {
+    "glove_like": dict(dim=100, metric="ip", pq_m=20, nprobe=32, L=192),
+    "deep_like": dict(dim=96, metric="ip", pq_m=16, nprobe=24, L=128),
+    "t2i_like": dict(dim=200, metric="ip", pq_m=20, nprobe=32, L=192),
+    "bigann_like": dict(dim=128, metric="l2", pq_m=16, nprobe=32, L=192),
+}
+
+
 def index_config(dataset: str) -> IndexConfig:
     return IndexConfig(**_CONFIGS[dataset])
+
+
+def ivf_index_config(dataset: str) -> IndexConfig:
+    c = _IVF_CONFIGS[dataset]
+    return IndexConfig(
+        dim=c["dim"], metric=c["metric"], index_type="ivf",
+        ivf=IVFConfig(nlist=0, kmeans_iters=10),
+        quant=QuantConfig(kind="pq", pq_m=c["pq_m"], kmeans_iters=8),
+        search=SearchConfig(L=c["L"], k=10, nprobe=c["nprobe"]))
 
 
 def full_config(dataset: str = "bigann_like") -> IndexConfig:
@@ -54,3 +79,11 @@ def smoke_config() -> IndexConfig:
         build=BuildConfig(M=8, knn_k=12, refine_iters=1, refine_cands=24,
                           reorder="mst"),
         search=SearchConfig(L=16, k=5))
+
+
+def ivf_smoke_config() -> IndexConfig:
+    return IndexConfig(
+        dim=32, metric="l2", index_type="ivf",
+        ivf=IVFConfig(nlist=8, kmeans_iters=4, list_pad=8),
+        quant=QuantConfig(kind="pq", pq_m=8, kmeans_iters=3),
+        search=SearchConfig(L=16, k=5, nprobe=4))

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import search as search_mod
 from repro.core.types import SearchConfig
 
@@ -72,7 +73,7 @@ def build_sharded_search(mesh: Mesh, cfg: SearchConfig, metric: str,
         neg, pos = jax.lax.top_k(-all_d, k)
         return -neg, jnp.take_along_axis(all_i, pos, axis=1)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_search, mesh=mesh,
         in_specs=(row_spec, row_spec, row_spec, rep),
         out_specs=(rep, rep),

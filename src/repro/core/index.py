@@ -5,12 +5,20 @@
     d, i = index.search(q, k)      # query processing
     index.save(path) / KBest.load(path)
 
-Build pipeline (DESIGN.md §3): kNN graph (brute / NN-descent) -> edge
-selection -> F rounds of 2-hop refinement (A1) -> reverse-edge fill ->
+One facade, two index families (config.index_type):
+
+"graph" build pipeline (DESIGN.md §3): kNN graph (brute / NN-descent) ->
+edge selection -> F rounds of 2-hop refinement (A1) -> reverse-edge fill ->
 graph reordering (A2) -> optional PQ/SQ training+encoding (A4) -> medoid
 entry point. Search runs the batched traversal of core.search with early
 termination (A3); quantized searches re-rank the top candidates with exact
 distances (standard ADC + re-rank).
+
+"ivf" build pipeline (DESIGN.md §4): k-means coarse quantizer -> residual
+PQ training+encoding (A4, shared codebook knobs) -> padded dense inverted
+lists. Search probes the nprobe nearest clusters, runs the fused ADC scan
+with per-list partial top-L (kernels/ivf_scan), then re-ranks exactly via
+the same gather path as the graph index.
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build as build_mod
+from repro.core import ivf as ivf_mod
 from repro.core import quantize as qz
 from repro.core import reorder as reorder_mod
 from repro.core import search as search_mod
@@ -44,6 +53,7 @@ class KBest:
         self.pq_codes: Optional[jnp.ndarray] = None
         self.sq: Optional[qz.SQState] = None
         self.sq_codes: Optional[jnp.ndarray] = None
+        self.ivf: Optional[ivf_mod.IVFState] = None
         self._dist_fns = {}
 
     # ------------------------------------------------------------------ add
@@ -55,6 +65,11 @@ class KBest:
         if cfg.metric == "cosine":
             x = normalize(x)
         metric = "ip" if cfg.metric == "cosine" else cfg.metric
+
+        if cfg.index_type == "ivf":
+            self.db = x
+            self.ivf = ivf_mod.build_ivf(x, cfg.ivf, cfg.quant)
+            return self
 
         knn_ids, knn_dists = build_mod.build_knn(
             x, b.knn_k, metric, builder=b.builder,
@@ -109,6 +124,35 @@ class KBest:
             q = normalize(q)
 
         n = self.db.shape[0]
+
+        if cfg.index_type == "ivf":
+            Q = q.shape[0]
+            wide = _widen(scfg)
+            _, cand, probes = ivf_mod.search_ivf(
+                self.ivf, q, scfg.nprobe, wide.L, metric,
+                impl=scfg.dist_impl)
+            # default: re-rank the WHOLE candidate queue — the ADC scan is
+            # far cheaper per candidate than graph traversal, so the exact
+            # pass (L distances/query) is where IVF recall is won back
+            rr = cfg.quant.rerank if cfg.quant.rerank > 0 else cand.shape[1]
+            dists, ids = self._rerank(q, cand, metric, scfg.k,
+                                      rr, impl=scfg.dist_impl)
+            if with_stats:
+                # scanned PQ codes + the exact re-rank distances, so the
+                # benchmark's dists_per_query column is comparable across
+                # index families
+                n_dist = (ivf_mod.scanned_counts(self.ivf, probes)
+                          + jnp.sum(cand[:, :min(rr, cand.shape[1])] >= 0,
+                                    axis=1).astype(jnp.int32))
+                stats = search_mod.SearchStats(
+                    n_hops=jnp.full((Q,), min(scfg.nprobe, self.ivf.nlist),
+                                    jnp.int32),
+                    n_dist=n_dist,
+                    early_terminated=jnp.zeros((Q,), bool),
+                    iters=jnp.int32(0))
+                return dists, ids, stats
+            return dists, ids
+
         entry_ids = self._entry_ids(scfg.n_entries, n)
         quant = cfg.quant.kind
 
@@ -118,13 +162,15 @@ class KBest:
             dists, ids, stats = search_mod.search(
                 self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
                 n_total=n)
-            dists, ids = self._rerank(q, ids, metric, scfg.k, cfg.quant.rerank)
+            dists, ids = self._rerank(q, ids, metric, scfg.k,
+                                      cfg.quant.rerank, impl=scfg.dist_impl)
         elif quant == "sq":
             dist_fn = self._get_dist_fn("sq", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
                 self.graph, q, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
                 n_total=n)
-            dists, ids = self._rerank(q, ids, metric, scfg.k, cfg.quant.rerank)
+            dists, ids = self._rerank(q, ids, metric, scfg.k,
+                                      cfg.quant.rerank, impl=scfg.dist_impl)
         else:
             dist_fn = self._get_dist_fn("full", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
@@ -163,14 +209,20 @@ class KBest:
             self._dist_fns[key] = fn
         return self._dist_fns[key]
 
-    def _rerank(self, q, ids, metric, k, rerank):
-        """Exact re-rank of the quantized search's top candidates."""
+    def _rerank(self, q, ids, metric, k, rerank, impl: str = "ref"):
+        """Exact re-rank of the quantized/IVF search's top candidates, via
+        the gather-then-distance path (Pallas gather_dist when impl is
+        "kernel", jnp gather otherwise)."""
         r = rerank if rerank > 0 else min(4 * k, ids.shape[1])
         r = min(r, ids.shape[1])
         cand = ids[:, :r]
-        vecs = self.db[jnp.maximum(cand, 0)]
-        from repro.core.distance import batched_one_to_many
-        d = batched_one_to_many(q, vecs, metric)
+        if impl == "kernel":
+            from repro.kernels import ops as kops
+            d = kops.gather_dist(q, self.db, cand, metric=metric)
+        else:
+            vecs = self.db[jnp.maximum(cand, 0)]
+            from repro.core.distance import batched_one_to_many
+            d = batched_one_to_many(q, vecs, metric)
         d = jnp.where(cand >= 0, d, jnp.inf)
         neg, pos = jax.lax.top_k(-d, k)
         return -neg, jnp.take_along_axis(cand, pos, axis=1)
@@ -179,7 +231,14 @@ class KBest:
     def save(self, path: str) -> None:
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        arrs = {"db": np.asarray(self.db), "graph": np.asarray(self.graph)}
+        arrs = {"db": np.asarray(self.db)}
+        if self.graph is not None:
+            arrs["graph"] = np.asarray(self.graph)
+        if self.ivf is not None:
+            arrs["ivf_centroids"] = np.asarray(self.ivf.centroids)
+            arrs["ivf_list_ids"] = np.asarray(self.ivf.list_ids)
+            arrs["ivf_list_codes"] = np.asarray(self.ivf.list_codes)
+            arrs["ivf_codebooks"] = np.asarray(self.ivf.pq.codebooks)
         if self.order is not None:
             arrs["order"] = np.asarray(self.order)
         if self.pq is not None:
@@ -202,7 +261,16 @@ class KBest:
         idx = cls(cfg)
         with np.load(p if p.suffix == ".npz" else str(p) + ".npz") as z:
             idx.db = jnp.asarray(z["db"])
-            idx.graph = jnp.asarray(z["graph"])
+            if "graph" in z:
+                idx.graph = jnp.asarray(z["graph"])
+            if "ivf_centroids" in z:
+                books = jnp.asarray(z["ivf_codebooks"])
+                idx.ivf = ivf_mod.IVFState(
+                    centroids=jnp.asarray(z["ivf_centroids"]),
+                    list_ids=jnp.asarray(z["ivf_list_ids"]),
+                    list_codes=jnp.asarray(z["ivf_list_codes"]),
+                    pq=qz.PQState(books, books.shape[0], books.shape[2]),
+                    residual=cfg.ivf.residual)
             if "pq_codebooks" in z:
                 books = jnp.asarray(z["pq_codebooks"])
                 idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
@@ -241,10 +309,12 @@ def _config_to_dict(cfg: IndexConfig) -> dict:
 
 
 def _config_from_dict(d: dict) -> IndexConfig:
-    from repro.core.types import BuildConfig, QuantConfig
+    from repro.core.types import BuildConfig, IVFConfig, QuantConfig
     return IndexConfig(
         dim=d["dim"], metric=d["metric"],
+        index_type=d.get("index_type", "graph"),
         build=BuildConfig(**d["build"]),
         search=SearchConfig(**d["search"]),
         quant=QuantConfig(**d["quant"]),
+        ivf=IVFConfig(**d.get("ivf", {})),
     )

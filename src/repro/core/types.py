@@ -17,6 +17,9 @@ METRICS = ("l2", "ip", "cosine")
 # Edge-selection rules supported by the refinement pipeline (paper §3.2).
 SELECT_RULES = ("none", "hnsw", "alpha", "ssg")
 
+# Index families behind the KBest facade (DESIGN.md §3 graph, §4 ivf).
+INDEX_TYPES = ("graph", "ivf")
+
 
 @dataclasses.dataclass(frozen=True)
 class BuildConfig:
@@ -59,11 +62,14 @@ class SearchConfig:
     dist_impl: str = "ref"       # "ref" | "kernel" — distance backend
     batch_B: int = 0             # 1-to-B batch size; 0 => M (full neighbor set)
     n_entries: int = 8           # entry points: medoid + (n-1) strided seeds
+    # --- IVF-only (ignored by the graph index, DESIGN.md §4) ---
+    nprobe: int = 8              # probed clusters per query
 
     def __post_init__(self):
         assert self.k <= self.L, (self.k, self.L)
         assert self.visited_mode in ("queue", "bitmap")
         assert 0.0 < self.et_t_frac <= 1.0
+        assert self.nprobe >= 1
 
     @property
     def hops_bound(self) -> int:
@@ -87,14 +93,36 @@ class QuantConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class IVFConfig:
+    """IVF coarse-partitioning parameters (DESIGN.md §4).
+
+    The fine (PQ) stage reuses QuantConfig (pq_m / kmeans_iters / rerank) so
+    the same codebook knobs drive both graph-PQ and IVF-PQ.
+    """
+
+    nlist: int = 0               # coarse clusters; 0 => round(sqrt(n))
+    kmeans_iters: int = 10       # Lloyd iterations of the coarse quantizer
+    residual: bool = True        # encode x - centroid (True) or raw x
+    list_pad: int = 128          # pad inverted-list length to this multiple
+                                 # (lane width: the H3 alignment analogue)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.nlist >= 0 and self.list_pad >= 1
+
+
+@dataclasses.dataclass(frozen=True)
 class IndexConfig:
     """Top-level config handed to KBest(config) (paper Table 2)."""
 
     dim: int
     metric: str = "l2"
+    index_type: str = "graph"    # INDEX_TYPES: "graph" | "ivf"
     build: BuildConfig = dataclasses.field(default_factory=BuildConfig)
     search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
 
     def __post_init__(self):
         assert self.metric in METRICS, self.metric
+        assert self.index_type in INDEX_TYPES, self.index_type

@@ -1,0 +1,104 @@
+"""ivf_scan — fused IVF-PQ list scan + partial top-L kernel (DESIGN.md §4).
+
+One grid step scans one (query, probed-list) pair: the ADC distances of every
+code in the list are computed against that pair's (m, K) lookup table, and
+the list is reduced to its top-L candidates *before* leaving the kernel, so
+output traffic per step is O(L) instead of O(max_len) — the partial
+reduction ScaNN-style CPU scanners do per SIMD register block, lifted to a
+whole inverted list per step.
+
+The ADC gather itself is the same MXU idiom as pq_adc, batched over the
+list: one-hot expand the (max_len, m) code block and contract it against the
+flattened LUT — a (max_len, m*K) x (m*K, 1) matmul, i.e. the paper's 1-to-B
+H1 batching in its 2-D lift (same move as batch_dist, with the list playing
+the role of the neighbor batch).
+
+Prefetch (H2 analogue): the codes/ids blocks for step (q, p) are the rows of
+`list_codes`/`list_ids` selected by the scalar-prefetched `probe_ids[q, p]`,
+so the pipeline engine DMAs list p+1 while list p is being scanned — the
+software-prefetch trick of the paper's Fig. 5 applied to inverted lists.
+
+Grid: (Q, P). Blocks: LUT (1, 1, m, K) by (q, p); codes (1, max_len, m) and
+ids (1, max_len) by probe_ids[q, p]; outputs (1, 1, L) by (q, p).
+
+NOTE: the in-kernel reduction uses jax.lax.top_k, which interpret mode (the
+CPU validation path, see ops.py) executes directly; on real TPU hardware
+Mosaic lowers it via a bitonic sort — keep L a power of two there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(L: int):
+    def _kernel(pids_ref, lut_ref, codes_ref, ids_ref, od_ref, oi_ref):
+        lut = lut_ref[0, 0].astype(jnp.float32)          # (m, K)
+        codes = codes_ref[0].astype(jnp.int32)           # (max_len, m)
+        ids = ids_ref[0]                                 # (max_len,)
+        max_len, m = codes.shape
+        K = lut.shape[1]
+        # gather-as-matmul: onehot (max_len, m*K) @ lut (m*K, 1) on the MXU
+        onehot = (codes[:, :, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (max_len, m, K), 2)
+                  ).astype(jnp.float32)
+        d = jax.lax.dot_general(
+            onehot.reshape(max_len, m * K), lut.reshape(m * K, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]    # (max_len,)
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        # partial reduction: this list's top-L leaves the kernel, not max_len
+        neg, pos = jax.lax.top_k(-d, L)
+        od_ref[0, 0] = -neg
+        oi_ref[0, 0] = jnp.where(jnp.isfinite(neg), ids[pos], -1)
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
+             list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *,
+             L: int, interpret: bool = False):
+    """Scan probed inverted lists, returning per-list top-L candidates.
+
+    luts:       (Q, Pl, m, K) f32 ADC tables; Pl is the probe count P, or 1
+                when the table is probe-independent (non-residual, or ip
+                with the centroid bias handled outside) — the kernel then
+                re-reads the single block instead of materializing P copies
+    list_codes: (nlist, max_len, m) uint8 PQ codes, padded rows arbitrary
+    list_ids:   (nlist, max_len) i32 database ids, -1 padding
+    probe_ids:  (Q, P) i32 probed cluster ids
+    Returns (dists (Q, P, L) f32 ascending, ids (Q, P, L) i32, -1 padding).
+    """
+    Q, Pl, m, K = luts.shape
+    P = probe_ids.shape[1]
+    nlist, max_len = list_ids.shape
+    assert Pl in (1, P), (Pl, P)
+    assert probe_ids.shape == (Q, P) and list_codes.shape == (nlist, max_len, m)
+    assert L <= max_len, (L, max_len)
+    lut_j = (lambda i, j, pids: (i, j, 0, 0)) if Pl == P else \
+        (lambda i, j, pids: (i, 0, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, K), lut_j),
+            pl.BlockSpec((1, max_len, m), lambda i, j, pids: (pids[i, j], 0, 0)),
+            pl.BlockSpec((1, max_len), lambda i, j, pids: (pids[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L), lambda i, j, pids: (i, j, 0)),
+            pl.BlockSpec((1, 1, L), lambda i, j, pids: (i, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _make_kernel(L),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q, P, L), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, P, L), jnp.int32)],
+        interpret=interpret,
+    )(probe_ids, luts, list_codes, list_ids)

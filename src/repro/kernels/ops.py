@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import batch_dist as _bd
 from repro.kernels import gather_dist as _gd
+from repro.kernels import ivf_scan as _iv
 from repro.kernels import pq_adc as _pq
 
 LANE = 128
@@ -56,3 +57,19 @@ def pq_adc(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
            ) -> jnp.ndarray:
     """(Q, m, K), (n, m) u8, (Q, B) -> (Q, B); -1 ids produce +inf."""
     return _pq.pq_adc(lut, codes, ids, interpret=_on_cpu())
+
+
+def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
+             list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *, L: int):
+    """(Q, Pl, m, K) luts (Pl in {1, P}), padded lists, (Q, P) probes ->
+    per-list top-L (dists, ids), each (Q, P, L'). L is clamped to the
+    padded list length; on real hardware it is also rounded up to a power
+    of two (Mosaic lowers the in-kernel top_k via bitonic sort), so L' may
+    exceed the request — callers merge/trim downstream and extra slots are
+    just more (possibly +inf) candidates."""
+    interp = _on_cpu()
+    L = min(L, list_ids.shape[1])
+    if not interp:
+        L = min(1 << (L - 1).bit_length(), list_ids.shape[1])
+    return _iv.ivf_scan(luts, list_codes, list_ids, probe_ids, L=L,
+                        interpret=interp)

@@ -44,3 +44,29 @@ def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
     g = jnp.take_along_axis(lut[:, None, :, :], c[..., None], axis=-1)[..., 0]
     out = jnp.sum(g, axis=-1)
     return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
+                 list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
+    """(Q, Pl, m, K) luts (Pl = P, or 1 for probe-independent tables),
+    (nlist, max_len, m) codes, (nlist, max_len) ids, (Q, P) probes ->
+    per-list top-L (dists (Q, P, L) ascending, ids (Q, P, L)).
+
+    ADC over every code of every probed list, padding (-1) masked to +inf,
+    then each list independently reduced to its L best — the semantic spec
+    of ivf_scan's fused scan + partial reduction.
+    """
+    import jax
+
+    P = probe_ids.shape[1]
+    if luts.shape[1] == 1 and P > 1:
+        luts = jnp.broadcast_to(luts, (luts.shape[0], P) + luts.shape[2:])
+    codes = list_codes[probe_ids].astype(jnp.int32)   # (Q, P, max_len, m)
+    ids = list_ids[probe_ids]                         # (Q, P, max_len)
+    g = jnp.take_along_axis(luts[:, :, None, :, :],   # (Q, P, 1, m, K)
+                            codes[..., None], axis=-1)[..., 0]
+    d = jnp.sum(g, axis=-1)                           # (Q, P, max_len)
+    d = jnp.where(ids >= 0, d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, L)
+    out_ids = jnp.take_along_axis(ids, pos, axis=-1)
+    return -neg, jnp.where(jnp.isfinite(neg), out_ids, -1)

@@ -1,4 +1,4 @@
-"""Production mesh construction (DESIGN.md §4, system-prompt contract).
+"""Production mesh construction (DESIGN.md §6, system-prompt contract).
 
 A FUNCTION, not a module constant: importing this module never touches jax
 device state (jax locks the device count at first backend init, and tests
@@ -18,3 +18,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Version-portable "activate this mesh" context manager.
+
+    jax >= 0.6 activates a mesh for bare-PartitionSpec sharding constraints
+    via jax.set_mesh; on 0.4.x the Mesh object itself is the context
+    manager (resource-env API). Same scoping semantics either way.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -1,4 +1,4 @@
-"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §4).
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §6).
 
 Parallelism plan over the production mesh (pod?, data, model):
 

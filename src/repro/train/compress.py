@@ -1,4 +1,4 @@
-"""Gradient compression for the DP all-reduce (DESIGN.md §4).
+"""Gradient compression for the DP all-reduce (DESIGN.md §6).
 
 int8 uniform quantization with per-leaf scale and *error feedback* (the
 residual of each quantization step is carried into the next step's gradient

@@ -1,4 +1,4 @@
-"""Fault-tolerant training loop (DESIGN.md §4).
+"""Fault-tolerant training loop (DESIGN.md §6).
 
 Production posture on thousands of nodes requires, at minimum:
   * periodic + signal-triggered checkpoints with atomic commit,

@@ -1,0 +1,142 @@
+"""IVF-PQ subsystem tests (DESIGN.md §4): recall vs brute-force oracle,
+ivf_scan kernel vs jnp reference, list-layout invariants, save/load."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ivf as ivf_mod
+from repro.core.index import KBest
+from repro.core.types import IVFConfig, IndexConfig, QuantConfig, SearchConfig
+from repro.data.vectors import make_dataset, recall_at_k
+
+RNG = np.random.default_rng(11)
+
+
+def _ivf_cfg(dim, metric, **kw):
+    return IndexConfig(
+        dim=dim, metric=metric, index_type="ivf",
+        ivf=IVFConfig(nlist=kw.pop("nlist", 0),
+                      kmeans_iters=kw.pop("kmeans_iters", 8),
+                      list_pad=kw.pop("list_pad", 128)),
+        quant=QuantConfig(kind="pq", pq_m=kw.pop("pq_m", 16),
+                          kmeans_iters=kw.pop("pq_iters", 6)),
+        search=SearchConfig(L=kw.pop("L", 128), k=10,
+                            nprobe=kw.pop("nprobe", 16)))
+
+
+# ------------------------------------------------------------------- kernel
+@pytest.mark.parametrize("q,p,nlist,max_len,m,L", [
+    (3, 2, 7, 24, 8, 8),
+    (5, 4, 16, 40, 16, 16),
+])
+def test_ivf_scan_kernel_vs_ref(q, p, nlist, max_len, m, L):
+    from repro.kernels import ops, ref
+    luts = jnp.asarray(RNG.normal(size=(q, p, m, 256)).astype(np.float32))
+    codes = jnp.asarray(
+        RNG.integers(0, 256, size=(nlist, max_len, m)).astype(np.uint8))
+    # ragged valid prefixes, -1 padding (like real inverted lists)
+    ids = np.full((nlist, max_len), -1, np.int32)
+    for c in range(nlist):
+        n_valid = int(RNG.integers(0, max_len + 1))
+        ids[c, :n_valid] = RNG.choice(10_000, size=n_valid, replace=False)
+    ids = jnp.asarray(ids)
+    probes = jnp.asarray(
+        np.stack([RNG.choice(nlist, size=p, replace=False)
+                  for _ in range(q)]).astype(np.int32))
+
+    kd, ki = ops.ivf_scan(luts, codes, ids, probes, L=L)
+    rd, ri = ref.ivf_scan_ref(luts, codes, ids, probes, L)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    # ascending per (q, p), padding at the tail
+    kd = np.asarray(kd)
+    assert np.all(kd[:, :, :-1] <= kd[:, :, 1:])
+    assert np.all((np.asarray(ki) >= 0) == np.isfinite(kd))
+
+
+# -------------------------------------------------------------------- build
+def test_ivf_lists_partition_db():
+    x = jnp.asarray(RNG.normal(size=(500, 32)).astype(np.float32))
+    state = ivf_mod.build_ivf(
+        x, IVFConfig(nlist=10, kmeans_iters=5, list_pad=8),
+        QuantConfig(kind="pq", pq_m=8, kmeans_iters=3))
+    ids = np.asarray(state.list_ids)
+    valid = ids[ids >= 0]
+    assert sorted(valid.tolist()) == list(range(500))
+    assert state.max_len % 8 == 0
+
+
+def test_ivf_exhaustive_probe_matches_pq_brute_force():
+    """nprobe == nlist must equal a flat scan of all PQ codes (the IVF
+    partitioning only routes, it must not change ADC distances)."""
+    from repro.core.quantize import pq_query_tables
+    from repro.kernels.ref import pq_adc_ref
+    n, d, L = 400, 32, 32
+    x = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(size=(6, d)).astype(np.float32))
+    state = ivf_mod.build_ivf(
+        x, IVFConfig(nlist=8, kmeans_iters=5, list_pad=8, residual=False),
+        QuantConfig(kind="pq", pq_m=8, kmeans_iters=4))
+    d_ivf, i_ivf, _ = ivf_mod.search_ivf(state, q, nprobe=8, L=L, metric="l2")
+
+    # flat ADC over all n codes, same codebooks (residual=False => raw x)
+    codes = np.zeros((n, state.pq.m), np.uint8)
+    ids_h = np.asarray(state.list_ids)
+    codes[ids_h[ids_h >= 0]] = np.asarray(state.list_codes)[ids_h >= 0]
+    lut = pq_query_tables(state.pq.codebooks, q, "l2").reshape(6, 8, 256)
+    all_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (6, n))
+    d_flat = np.asarray(pq_adc_ref(lut, jnp.asarray(codes), all_ids))
+    top = np.sort(d_flat, axis=1)[:, :L]
+    np.testing.assert_allclose(np.asarray(d_ivf), top, rtol=1e-4, atol=1e-4)
+    # sets agree (ties can permute ids)
+    for a, b in zip(np.asarray(i_ivf), np.argsort(d_flat, axis=1)[:, :L]):
+        assert len(set(a.tolist()) & set(b.tolist())) >= L - 2
+
+
+# ------------------------------------------------------------------- recall
+def test_ivf_recall_50k_bigann():
+    """Acceptance: recall@10 >= 0.90 on a 50k synthetic set, re-rank on."""
+    ds = make_dataset("bigann_like", n=50_000, n_queries=50, k=10)
+    cfg = _ivf_cfg(128, "l2", pq_m=16, kmeans_iters=10, pq_iters=8,
+                   L=192, nprobe=32)
+    idx = KBest(cfg).add(ds.base)
+    _, ids = idx.search(ds.queries, k=10)
+    rec = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert rec >= 0.90, rec
+
+
+def test_ivf_recall_gaussian_mixture_ip():
+    ds = make_dataset("glove_like", n=8000, n_queries=40, k=10)
+    cfg = _ivf_cfg(100, "ip", pq_m=20, L=128, nprobe=24, list_pad=8)
+    idx = KBest(cfg).add(ds.base)
+    _, ids = idx.search(ds.queries, k=10)
+    rec = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert rec >= 0.85, rec
+
+
+def test_ivf_kernel_impl_matches_ref_impl(bigann_ds):
+    cfg = _ivf_cfg(128, "l2", nlist=32, L=64, nprobe=8, list_pad=8)
+    idx = KBest(cfg).add(bigann_ds.base)
+    s_k = dataclasses.replace(cfg.search, dist_impl="kernel")
+    d_r, i_r = idx.search(bigann_ds.queries[:8], k=10)
+    d_k, i_k = idx.search(bigann_ds.queries[:8], k=10, search_cfg=s_k)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+
+
+# ---------------------------------------------------------------- save/load
+def test_ivf_save_load_roundtrip(tmp_path, bigann_ds):
+    cfg = _ivf_cfg(128, "l2", nlist=32, L=64, nprobe=8, list_pad=8)
+    idx = KBest(cfg).add(bigann_ds.base)
+    d1, i1 = idx.search(bigann_ds.queries[:10], k=10)
+    path = str(tmp_path / "ivf_index.npz")
+    idx.save(path)
+    idx2 = KBest.load(path)
+    assert idx2.config.index_type == "ivf"
+    d2, i2 = idx2.search(bigann_ds.queries[:10], k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
