@@ -9,6 +9,8 @@ Sections:
   [ablation]    paper Fig. 7 — Base -> +Index -> +EarlyTerm -> +SIMD ->
                 +Prefetch
   [scaling]     paper §5.2 — corpus-size sweep + sharded search
+  [serving]     beyond-paper — closed/open-loop QPS through the batch-
+                serving engine (shape-bucketed compile cache, DESIGN.md §11)
   [roofline]    beyond-paper — per (arch x shape) roofline terms from the
                 dry-run artifacts (requires launch/dryrun.py artifacts)
 
@@ -29,7 +31,8 @@ def main() -> None:
     ap.add_argument("--sections", type=str, default="all")
     args, _ = ap.parse_known_args()
     want = (args.sections.split(",") if args.sections != "all"
-            else ["qps_recall", "ablation", "scaling", "roofline"])
+            else ["qps_recall", "ablation", "scaling", "serving",
+                  "roofline"])
 
     failures = []
     for name in want:
@@ -45,6 +48,9 @@ def main() -> None:
             elif name == "scaling":
                 from benchmarks import scaling
                 scaling.main(quick=args.quick)
+            elif name == "serving":
+                from benchmarks import serving
+                serving.main(smoke=args.quick)
             elif name == "roofline":
                 from benchmarks import roofline
                 roofline.main()

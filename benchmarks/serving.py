@@ -1,0 +1,169 @@
+"""Serving benchmark — closed-loop and open-loop QPS through repro.serve.
+
+Beyond-paper section (the paper reports steady-state QPS only; a deployed
+service also cares about what variable-size traffic does to the compile
+cache and the latency tail):
+
+  closed-loop : back-to-back variable-size batches (offered load = service
+                rate). Measures sustained QPS, per-query cost, and that the
+                shape-bucketed compile cache absorbs every batch size
+                without re-tracing.
+  open-loop   : Poisson arrivals at a target rate against a virtual clock
+                (single server). Measures queueing latency p50/p95/p99 —
+                the number a latency SLO actually binds on.
+
+    PYTHONPATH=src python -m benchmarks.serving [--smoke]
+
+--smoke runs a CI-sized corpus and HARD-FAILS (exit 1) if serving many
+batch sizes triggers more XLA traces than warmed shape buckets — the
+compile-cache regression guard (a re-trace per batch shape is exactly the
+anti-pattern the engine exists to prevent).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+ROW = ("{mode},{engine},{requests},{queries},{qps:.1f},{p50:.2f},{p95:.2f},"
+       "{p99:.2f},{dists:.0f},{recall},{traces}")
+HDR = "mode,engine,requests,queries,qps,p50_ms,p95_ms,p99_ms,dists_per_query,recall,traces"
+
+
+def build_engines(n: int, n_queries: int, quick: bool):
+    from repro.core.index import KBest
+    from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                                  QuantConfig, SearchConfig)
+    from repro.data.vectors import make_dataset
+    from repro.serve import SearchEngine
+
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=10)
+    dim = ds.base.shape[1]
+    build = (BuildConfig(M=24, knn_k=32, builder="brute", refine_iters=0,
+                         reorder="none") if quick else
+             BuildConfig(M=32, knn_k=48, refine_iters=1, reorder="mst"))
+    graph = KBest(IndexConfig(
+        dim=dim, metric=ds.metric, build=build,
+        search=SearchConfig(L=64, k=10, early_term=True))).add(ds.base)
+    ivf = KBest(IndexConfig(
+        dim=dim, metric=ds.metric, index_type="ivf",
+        ivf=IVFConfig(kmeans_iters=4 if quick else 8),
+        quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=4 if quick else 8),
+        search=SearchConfig(L=64, k=10, nprobe=8))).add(ds.base)
+    engines = {
+        "graph": SearchEngine(graph, min_bucket=8, max_bucket=32,
+                              name="graph"),
+        "ivf": SearchEngine(ivf, min_bucket=8, max_bucket=32, name="ivf"),
+    }
+    return ds, engines
+
+
+def _row(mode, name, report_or_stats, qps, p50, p95, p99, recall, traces):
+    st = report_or_stats
+    print(ROW.format(mode=mode, engine=name, requests=st.n_requests,
+                     queries=st.n_queries, qps=qps, p50=p50, p95=p95,
+                     p99=p99, dists=st.dists_per_query,
+                     recall=("-" if recall is None else f"{recall:.3f}"),
+                     traces=traces))
+
+
+def closed_loop(ds, engines, n_requests: int, seed: int = 0):
+    """Back-to-back variable-size batches; returns the ServeReport."""
+    from repro.serve import Request, serve_loop
+    rng = np.random.default_rng(seed)
+    nq = len(ds.queries)
+    reqs = []
+    for j in range(n_requests):
+        b = int(rng.integers(3, 28))
+        s = int(rng.integers(0, max(nq - b, 1)))
+        reqs.append(Request(queries=ds.queries[s:s + b],
+                            gt_ids=ds.gt_ids[s:s + b],
+                            engine=str(rng.choice(list(engines)))))
+    t0 = time.perf_counter()
+    report = serve_loop(engines, reqs)
+    wall = time.perf_counter() - t0
+    for name, st in sorted(report.engine_stats.items()):
+        if st.n_queries == 0:
+            continue
+        qps = st.n_queries / max(st.mean_lat_ms * st.n_requests / 1e3, 1e-9)
+        # PER-ENGINE recall (engine telemetry, gt forwarded by serve_loop)
+        # — the blended report.recall_at_k would fabricate identical
+        # numbers for both families and defeat cross-family tuning
+        _row("closed", name, st, qps, st.lat_p50_ms, st.lat_p95_ms,
+             st.lat_p99_ms, st.recall_at_k, st.n_traces)
+    print(f"# closed-loop: {report.summary()} | wall {wall:.2f}s "
+          f"qps={report.n_served / wall:.1f}")
+    return report
+
+
+def open_loop(ds, engine, rate_qps: float, n_requests: int, seed: int = 0):
+    """Poisson arrivals on a virtual clock, single server: request latency =
+    queue wait + measured service time. Offered load above the service rate
+    shows up as an exploding p99 — the open/closed distinction that
+    closed-loop benchmarks famously hide."""
+    rng = np.random.default_rng(seed)
+    nq = len(ds.queries)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n_requests))
+    lat, served = [], 0
+    t_free = 0.0
+    for a in arrivals:
+        b = int(rng.integers(3, 28))
+        s = int(rng.integers(0, max(nq - b, 1)))
+        t0 = time.perf_counter()
+        engine.search(ds.queries[s:s + b])
+        service = time.perf_counter() - t0
+        start = max(a, t_free)
+        t_free = start + service
+        lat.append((t_free - a) * 1e3)
+        served += b
+    lat = np.asarray(lat)
+    st = engine.stats()
+    offered_qps = rate_qps * served / n_requests    # requests/s * mean batch
+    _row("open", engine.name, st, offered_qps,
+         float(np.percentile(lat, 50)), float(np.percentile(lat, 95)),
+         float(np.percentile(lat, 99)), None, st.n_traces)
+    return lat
+
+
+def main(smoke: bool = False, n: int = 8000, n_queries: int = 200,
+         n_requests: int = 40) -> None:
+    if smoke:
+        n, n_queries, n_requests = 1200, 60, 12
+    ds, engines = build_engines(n, n_queries, quick=smoke)
+
+    # precompile the ladder once; serving must then never trace again
+    for e in engines.values():
+        e.warmup()
+    traces_after_warmup = {k: e.n_traces for k, e in engines.items()}
+    print(f"# warmup traces: {traces_after_warmup}")
+    print(HDR)
+
+    closed_loop(ds, engines, n_requests)
+    engines["graph"].reset_stats()      # clean accounting for the open loop
+    open_loop(ds, engines["graph"], rate_qps=2.0 if smoke else 10.0,
+              n_requests=max(6, n_requests // 2), seed=1)
+
+    fresh = {k: e.n_traces - traces_after_warmup[k]
+             for k, e in engines.items()}
+    if any(fresh.values()):
+        msg = (f"COMPILE-CACHE REGRESSION: serving traced fresh XLA programs "
+               f"after warmup: {fresh} — every batch size must land in a "
+               f"warmed shape bucket")
+        if smoke:
+            # raise (not sys.exit) so benchmarks/run.py's per-section
+            # harness can record the failure; the CLI still exits 1
+            raise RuntimeError(msg)
+        print("WARNING:", msg)
+    else:
+        print("# compile cache: 0 fresh traces after warmup (ok)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run + hard compile-cache assertion")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--requests", type=int, default=40)
+    args = ap.parse_args()
+    main(smoke=args.smoke, n=args.n, n_requests=args.requests)

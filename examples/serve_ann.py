@@ -1,20 +1,19 @@
 """End-to-end ANNS serving driver (the paper's deployment scenario):
-batched requests against a prebuilt index, with early termination tuned to
-a recall target, quantized (SQ) first-pass + exact re-rank, and latency
-accounting per batch.
+variable-size batched requests against a prebuilt index through the
+batch-serving engine (repro.serve) — shape-bucketed compile cache, early
+termination tuned to a recall target, quantized (SQ) first-pass + exact
+re-rank, and per-request latency/recall telemetry.
 
     PYTHONPATH=src python examples/serve_ann.py
 """
-import dataclasses
-import time
-
 import numpy as np
 
 from repro.core.index import KBest
 from repro.core.tune import tune_early_term
 from repro.core.types import (BuildConfig, IndexConfig, QuantConfig,
                               SearchConfig)
-from repro.data.vectors import make_dataset, recall_at_k
+from repro.data.vectors import make_dataset
+from repro.serve import Request, SearchEngine, serve_loop
 
 
 def main():
@@ -34,23 +33,27 @@ def main():
     print(f"tuned early-term: t_frac={tuned.et_t_frac} "
           f"patience={tuned.et_patience}")
 
-    # --- online: batched request loop ------------------------------------
+    # --- online: serve the remaining queries in variable-size batches ----
+    engine = SearchEngine(index, min_bucket=8, max_bucket=32)
+    engine.warmup([32], search_cfg=tuned)       # precompile the hot bucket
     batch_size = 32
-    lat = []
-    hits = 0
-    index.search(ds.queries[:batch_size], search_cfg=tuned)   # warmup/jit
-    for s in range(50, 200, batch_size):
-        q = ds.queries[s:s + batch_size]
-        t0 = time.perf_counter()
-        d, i = index.search(q, search_cfg=tuned)
-        np.asarray(d)
-        lat.append((time.perf_counter() - t0) / len(q) * 1e3)
-        hits += recall_at_k(np.asarray(i), ds.gt_ids[s:s + batch_size], 10) \
-            * len(q)
-    total = len(range(50, 200, batch_size)) * batch_size
-    print(f"served {total} queries | recall@10={hits/total:.3f} | "
-          f"mean latency {np.mean(lat):.2f} ms/q (CPU interpret) | "
-          f"p95 {np.percentile(lat, 95):.2f} ms/q")
+    requests = [
+        # the final batch is PARTIAL (150 % 32 != 0): recall and latency
+        # denominators must use the true per-request counts, not
+        # ceil-batches * batch_size — serve_loop accounts per served query
+        Request(queries=ds.queries[s:s + batch_size],
+                gt_ids=ds.gt_ids[s:s + batch_size], search_cfg=tuned)
+        for s in range(50, 200, batch_size)
+    ]
+    report = serve_loop(engine, requests, coalesce=False)
+    st = report.engine_stats[engine.name]
+    per_q = st.mean_lat_ms * st.n_requests / max(st.n_queries, 1)
+    print(f"served {report.n_served} queries | "
+          f"recall@10={report.recall_at_k:.3f} | "
+          f"mean latency {per_q:.2f} ms/q (CPU interpret) | "
+          f"p95 {report.lat_p95_ms:.2f} ms/batch")
+    print("engine:", st.summary())
+    assert report.n_served == 150, report.n_served
 
 
 if __name__ == "__main__":

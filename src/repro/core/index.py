@@ -113,16 +113,71 @@ class KBest:
                with_stats: bool = False):
         """Top-k search. queries: (Q, d). Returns (dists, ids[, stats])."""
         assert self.db is not None, "call add() first"
-        cfg = self.config
-        scfg = search_cfg or cfg.search
+        scfg = self._resolve_cfg(k, search_cfg)
+        dists, ids, stats = self._search_impl(
+            self._prep_queries(queries), scfg, valid_mask=None,
+            with_stats=with_stats)
+        if with_stats:
+            return dists, ids, stats
+        return dists, ids
+
+    def search_padded(self, queries: np.ndarray, valid_mask: np.ndarray,
+                      k: Optional[int] = None,
+                      search_cfg: Optional[SearchConfig] = None,
+                      with_stats: bool = False):
+        """Shape-stable search over a padded batch (the serving entry point).
+
+        queries: (B, d) where only rows with valid_mask[i] are real requests;
+        padded rows come back as (+inf, -1) with zeroed stats, and valid
+        rows are bit-identical to an unpadded `search` of the same queries,
+        so a serving engine can pad every incoming batch to a fixed set of
+        shape buckets and never re-trace. For the graph index padded rows
+        start inactive in the lockstep traversal (free idle lanes,
+        core.search's masking); the IVF scan is dense per-lane work with no
+        loop to idle, so its padded lanes still compute (then get masked) —
+        bucketing amortizes that to at most one bucket step of slack.
+        """
+        assert self.db is not None, "call add() first"
+        scfg = self._resolve_cfg(k, search_cfg)
+        vm = jnp.asarray(valid_mask, dtype=bool)
+        dists, ids, stats = self._search_impl(
+            self._prep_queries(queries), scfg, valid_mask=vm,
+            with_stats=with_stats)
+        dists = jnp.where(vm[:, None], dists, jnp.inf)
+        ids = jnp.where(vm[:, None], ids, -1)
+        if with_stats:
+            stats = search_mod.SearchStats(
+                n_hops=jnp.where(vm, stats.n_hops, 0),
+                n_dist=jnp.where(vm, stats.n_dist, 0),
+                early_terminated=stats.early_terminated & vm,
+                iters=stats.iters)
+            return dists, ids, stats
+        return dists, ids
+
+    def _resolve_cfg(self, k: Optional[int],
+                     search_cfg: Optional[SearchConfig]) -> SearchConfig:
+        scfg = search_cfg or self.config.search
         if k is not None and k != scfg.k:
-            scfg = dataclasses.replace(scfg, k=k)
-        metric = "ip" if cfg.metric == "cosine" else cfg.metric
+            # k > L would trip SearchConfig's k <= L invariant; a caller
+            # asking for more results than the queue holds means "widen the
+            # queue to fit", not "crash".
+            scfg = dataclasses.replace(scfg, k=k, L=max(scfg.L, k))
+        return scfg
 
+    def _prep_queries(self, queries) -> jnp.ndarray:
         q = jnp.asarray(queries, dtype=jnp.float32)
-        if cfg.metric == "cosine":
+        if self.config.metric == "cosine":
             q = normalize(q)
+        return q
 
+    def _search_impl(self, q: jnp.ndarray, scfg: SearchConfig,
+                     valid_mask: Optional[jnp.ndarray],
+                     with_stats: bool):
+        """Shared body of search/search_padded. Pure jax ops on concrete
+        configs, so the serving engine can close over it under one jit trace
+        per (shape bucket, config) key. Returns (dists, ids, stats|None)."""
+        cfg = self.config
+        metric = "ip" if cfg.metric == "cosine" else cfg.metric
         n = self.db.shape[0]
 
         if cfg.index_type == "ivf":
@@ -135,23 +190,20 @@ class KBest:
             # far cheaper per candidate than graph traversal, so the exact
             # pass (L distances/query) is where IVF recall is won back
             rr = cfg.quant.rerank if cfg.quant.rerank > 0 else cand.shape[1]
-            dists, ids = self._rerank(q, cand, metric, scfg.k,
-                                      rr, impl=scfg.dist_impl)
-            if with_stats:
-                # scanned PQ codes + the exact re-rank distances, so the
-                # benchmark's dists_per_query column is comparable across
-                # index families
-                n_dist = (ivf_mod.scanned_counts(self.ivf, probes)
-                          + jnp.sum(cand[:, :min(rr, cand.shape[1])] >= 0,
-                                    axis=1).astype(jnp.int32))
-                stats = search_mod.SearchStats(
-                    n_hops=jnp.full((Q,), min(scfg.nprobe, self.ivf.nlist),
-                                    jnp.int32),
-                    n_dist=n_dist,
-                    early_terminated=jnp.zeros((Q,), bool),
-                    iters=jnp.int32(0))
-                return dists, ids, stats
-            return dists, ids
+            dists, ids, n_exact = self._rerank(q, cand, metric, scfg.k,
+                                               rr, impl=scfg.dist_impl)
+            if not with_stats:
+                return dists, ids, None
+            # scanned PQ codes + the exact re-rank distances, so the
+            # benchmark's dists_per_query column is comparable across
+            # index families
+            stats = search_mod.SearchStats(
+                n_hops=jnp.full((Q,), min(scfg.nprobe, self.ivf.nlist),
+                                jnp.int32),
+                n_dist=ivf_mod.scanned_counts(self.ivf, probes) + n_exact,
+                early_terminated=jnp.zeros((Q,), bool),
+                iters=jnp.int32(0))
+            return dists, ids, stats
 
         entry_ids = self._entry_ids(scfg.n_entries, n)
         quant = cfg.quant.kind
@@ -161,38 +213,57 @@ class KBest:
             dist_fn = self._get_dist_fn("pq", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
                 self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
-                n_total=n)
-            dists, ids = self._rerank(q, ids, metric, scfg.k,
-                                      cfg.quant.rerank, impl=scfg.dist_impl)
+                n_total=n, valid_mask=valid_mask)
+            dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k,
+                                               cfg.quant.rerank,
+                                               impl=scfg.dist_impl)
         elif quant == "sq":
             dist_fn = self._get_dist_fn("sq", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
                 self.graph, q, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
-                n_total=n)
-            dists, ids = self._rerank(q, ids, metric, scfg.k,
-                                      cfg.quant.rerank, impl=scfg.dist_impl)
+                n_total=n, valid_mask=valid_mask)
+            dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k,
+                                               cfg.quant.rerank,
+                                               impl=scfg.dist_impl)
         else:
+            n_exact = None
             dist_fn = self._get_dist_fn("full", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
-                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=scfg, n_total=n)
+                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=scfg,
+                n_total=n, valid_mask=valid_mask)
+
+        if n_exact is not None:
+            # the quantized first pass counts ADC lookups in n_dist; the
+            # exact re-rank distances must be counted too, or the graph-PQ/SQ
+            # rows undercount vs. the IVF path (which adds its re-rank) and
+            # the cross-family dists_per_query comparison silently breaks
+            stats = stats._replace(n_dist=stats.n_dist + n_exact)
 
         # translate internal (post-reorder) ids back to the user's add() ids
         if self.order is not None:
             order = jnp.asarray(self.order, dtype=jnp.int32)
             ids = jnp.where(ids >= 0, order[jnp.maximum(ids, 0)], -1)
 
-        if with_stats:
-            return dists, ids, stats
-        return dists, ids
+        return dists, ids, (stats if with_stats else None)
 
     def _entry_ids(self, n_entries: int, n: int) -> jnp.ndarray:
-        """Medoid + deterministic strided seeds: cheap cluster coverage for
-        the lockstep search (the paper uses a random-or-fixed entry; multiple
-        entries are the batched equivalent of per-thread random entries)."""
+        """Medoid + evenly-spaced deterministic seeds: cheap cluster coverage
+        for the lockstep search (the paper uses a random-or-fixed entry;
+        multiple entries are the batched equivalent of per-thread random
+        entries).
+
+        The offsets are strictly increasing integers in [1, n-1] (linspace
+        step >= 1 because e <= n), so all e ids are DISTINCT — the old
+        strided form `entry + i*(n//e) mod n` could wrap duplicates onto the
+        medoid for small n, which both wastes queue slots and hands
+        duplicate ids to the bitmap seeding (see _bitmap_set's disjointness
+        contract)."""
         e = max(1, min(n_entries, n))
-        extra = (self.entry + (jnp.arange(1, e, dtype=jnp.int32)
-                               * jnp.int32(max(1, n // e)))) % n
-        return jnp.concatenate([jnp.array([self.entry], jnp.int32), extra])
+        if e == 1:
+            return jnp.array([self.entry % n], jnp.int32)
+        off = np.round(np.linspace(1, n - 1, e - 1)).astype(np.int64)
+        ids = (self.entry + np.concatenate([[0], off])) % n
+        return jnp.asarray(ids, jnp.int32)
 
     def _get_dist_fn(self, kind: str, impl: str):
         key = (kind, impl)
@@ -212,9 +283,11 @@ class KBest:
     def _rerank(self, q, ids, metric, k, rerank, impl: str = "ref"):
         """Exact re-rank of the quantized/IVF search's top candidates, via
         the gather-then-distance path (Pallas gather_dist when impl is
-        "kernel", jnp gather otherwise)."""
+        "kernel", jnp gather otherwise). Returns (dists (Q, k), ids (Q, k),
+        n_exact (Q,) i32 — the exact distances actually computed, for the
+        cross-family n_dist accounting)."""
         r = rerank if rerank > 0 else min(4 * k, ids.shape[1])
-        r = min(r, ids.shape[1])
+        r = min(max(r, k), ids.shape[1])   # never fewer candidates than k
         cand = ids[:, :r]
         if impl == "kernel":
             from repro.kernels import ops as kops
@@ -225,7 +298,8 @@ class KBest:
             d = batched_one_to_many(q, vecs, metric)
         d = jnp.where(cand >= 0, d, jnp.inf)
         neg, pos = jax.lax.top_k(-d, k)
-        return -neg, jnp.take_along_axis(cand, pos, axis=1)
+        n_exact = jnp.sum(cand >= 0, axis=1).astype(jnp.int32)
+        return -neg, jnp.take_along_axis(cand, pos, axis=1), n_exact
 
     # ------------------------------------------------------------ save/load
     def save(self, path: str) -> None:

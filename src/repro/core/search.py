@@ -74,13 +74,28 @@ def _bitmap_test(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     return (bit == 1) & (ids >= 0)
 
 
-def _bitmap_set(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """Set bits for (deduped, valid) ids. Disjoint bits => scatter-add == or."""
+def _bitmap_set_raw(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Set bits via scatter-add. PRECONDITION: ids are deduped within the
+    batch AND none of their bits are already set — the add only equals a
+    bitwise-or while the added bits are disjoint; a duplicate id (or an
+    already-set bit) carries into the adjacent bit and corrupts the visited
+    set. The traversal loop satisfies this by construction (_dedupe_row +
+    _bitmap_test masking); every other caller must use _bitmap_set."""
     valid = ids >= 0
     safe = jnp.maximum(ids, 0)
     word_idx = jnp.where(valid, safe >> 5, bitmap.shape[0] - 1)
     val = jnp.where(valid, jnp.uint32(1) << (safe.astype(jnp.uint32) & 31), jnp.uint32(0))
     return bitmap.at[word_idx].add(val)
+
+
+def _bitmap_set(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Set bits for valid ids: safe for ANY input — dedupes within the
+    batch and skips already-set bits before the scatter-add, so colliding
+    entry seeds (e.g. strided seeds wrapping onto the medoid) cannot carry
+    into adjacent bits."""
+    ids = _dedupe_row(ids)
+    ids = jnp.where(_bitmap_test(bitmap, ids), -1, ids)
+    return _bitmap_set_raw(bitmap, ids)
 
 
 @functools.partial(
@@ -95,8 +110,16 @@ def search(
     dist_fn: DistFn,
     cfg: SearchConfig,
     n_total: int,
+    valid_mask: Optional[jnp.ndarray] = None,  # (Q,) bool; None => all valid
 ) -> Tuple[jnp.ndarray, jnp.ndarray, SearchStats]:
-    """Batched ANN search. Returns (dists (Q, k), ids (Q, k), stats)."""
+    """Batched ANN search. Returns (dists (Q, k), ids (Q, k), stats).
+
+    `valid_mask` marks real queries in a shape-padded batch: invalid lanes
+    start inactive, so they are the same free lockstep-idle lanes as
+    early-terminated queries and add no distance computations. Their rows
+    still hold the (garbage) seed entries — callers mask outputs (the
+    serving engine's `search_padded` does).
+    """
     Q = queries.shape[0]
     L, k, M = cfg.L, cfg.k, graph.shape[1]
     t_pos = jnp.int32(int(cfg.et_t_frac * L))
@@ -122,7 +145,8 @@ def search(
         bitmap=bitmap,
         et_ctr=jnp.zeros((Q,), jnp.int32),
         et_fired=jnp.zeros((Q,), bool),
-        active=jnp.ones((Q,), bool),
+        active=(jnp.ones((Q,), bool) if valid_mask is None
+                else valid_mask.astype(bool)),
         hops=jnp.zeros((Q,), jnp.int32),
         ndist=jnp.zeros((Q,), jnp.int32),
         it=jnp.int32(0),
@@ -146,7 +170,8 @@ def search(
         if cfg.visited_mode == "bitmap":
             seen = jax.vmap(_bitmap_test)(bitmap, nbrs)
             nbrs = jnp.where(seen, -1, nbrs)
-            bitmap = jax.vmap(_bitmap_set)(bitmap, nbrs)
+            # nbrs are deduped (above) and seen-masked: raw scatter is safe
+            bitmap = jax.vmap(_bitmap_set_raw)(bitmap, nbrs)
 
         # --- the 1-to-B (here Q-to-B) batched distance computation (H1) ---
         nd = dist_fn(queries, nbrs)

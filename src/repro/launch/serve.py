@@ -17,23 +17,49 @@ import numpy as np
 
 
 def serve_ann(n: int):
+    """Graph and IVF indexes served side by side through the batch-serving
+    engine (repro.serve): mixed batch sizes and mixed k drain through one
+    shape-bucketed compile cache per engine."""
     from repro.core.index import KBest
-    from repro.core.types import BuildConfig, IndexConfig, SearchConfig
-    from repro.data.vectors import make_dataset, recall_at_k
+    from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                                  QuantConfig, SearchConfig)
+    from repro.data.vectors import make_dataset
+    from repro.serve import Request, SearchEngine, serve_loop
     ds = make_dataset("deep_like", n=n, n_queries=100, k=10)
-    cfg = IndexConfig(dim=ds.base.shape[1], metric=ds.metric,
-                      build=BuildConfig(M=32, knn_k=48, refine_iters=1,
-                                        reorder="mst"),
-                      search=SearchConfig(L=64, k=10, early_term=True))
-    idx = KBest(cfg).add(ds.base)
-    idx.search(ds.queries[:8])
+    dim = ds.base.shape[1]
+    graph = KBest(IndexConfig(
+        dim=dim, metric=ds.metric,
+        build=BuildConfig(M=32, knn_k=48, refine_iters=1, reorder="mst"),
+        search=SearchConfig(L=64, k=10, early_term=True))).add(ds.base)
+    ivf = KBest(IndexConfig(
+        dim=dim, metric=ds.metric, index_type="ivf",
+        ivf=IVFConfig(kmeans_iters=6),
+        quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=6),
+        search=SearchConfig(L=64, k=10, nprobe=8))).add(ds.base)
+
+    engines = {"graph": SearchEngine(graph, max_bucket=16, name="graph"),
+               "ivf": SearchEngine(ivf, max_bucket=16, name="ivf")}
+    for e in engines.values():
+        for kk in (5, 10):        # warm EVERY (bucket, k) the traffic emits,
+            e.warmup(k=kk)        # or first-hit compiles pollute latencies
+
+    rng = np.random.default_rng(0)
+    requests, s = [], 0
+    while s < len(ds.queries):
+        b = int(rng.integers(4, 17))          # variable-size traffic
+        e = min(s + b, len(ds.queries))
+        requests.append(Request(
+            queries=ds.queries[s:e], gt_ids=ds.gt_ids[s:e],
+            engine=rng.choice(["graph", "ivf"]),
+            k=int(rng.choice([5, 10]))))
+        s = e
+
     t0 = time.perf_counter()
-    d, i = idx.search(ds.queries)
-    np.asarray(d)
+    report = serve_loop(engines, requests)
     dt = time.perf_counter() - t0
-    print(f"served {len(ds.queries)} queries in {dt*1e3:.1f} ms "
-          f"(CPU interpret) recall@10="
-          f"{recall_at_k(np.asarray(i), ds.gt_ids, 10):.3f}")
+    print(f"{report.summary()} | wall {dt*1e3:.1f} ms (CPU interpret)")
+    for name, st in sorted(report.engine_stats.items()):
+        print(f"  [{name}] {st.summary()}")
 
 
 def serve_lm(arch: str):

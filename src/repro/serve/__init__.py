@@ -1,0 +1,21 @@
+"""Batch-serving engine for KBest indexes (DESIGN.md §11).
+
+    from repro.serve import SearchEngine, Request, serve_loop
+
+`SearchEngine(index)` turns a built `KBest` into a serving endpoint:
+incoming batches are padded to a small ladder of power-of-two shape
+buckets and dispatched through a compile cache keyed on
+(bucket, SearchConfig, index_type, quant), so variable-size request
+traffic never re-traces XLA. `serve_loop` drains a queue of
+heterogeneous `Request`s — mixed batch sizes, mixed k, graph and IVF
+engines side by side — with true served-count accounting.
+"""
+from repro.serve.engine import (EngineStats, SearchEngine, bucket_ladder,
+                                bucket_for)
+from repro.serve.scheduler import (Request, RequestResult, ServeReport,
+                                   serve_loop)
+
+__all__ = [
+    "SearchEngine", "EngineStats", "bucket_for", "bucket_ladder",
+    "Request", "RequestResult", "ServeReport", "serve_loop",
+]

@@ -1,0 +1,244 @@
+"""SearchEngine — shape-bucketed, compile-cached serving facade (DESIGN.md §11).
+
+The paper's deployment scenario is a service absorbing tens of millions of
+queries per day. For a JIT-compiled search stack the dominant avoidable cost
+under variable-size traffic is re-tracing: every new batch shape (and every
+`SearchConfig` tweak) is a fresh XLA compile, orders of magnitude slower
+than the search itself. The engine removes that cost structurally:
+
+  1. **Shape buckets.** Incoming batches are padded up to the next
+     power-of-two bucket (clamped to [min_bucket, max_bucket]); batches
+     larger than max_bucket are split. A handful of buckets covers any
+     traffic mix, so the set of compiled programs is small and bounded.
+  2. **Padded lanes are (nearly) free.** Padding rides
+     `KBest.search_padded`: graph-index padded rows enter the lockstep
+     traversal inactive (core.search's `active` mask — the same mechanism
+     that idles early-terminated queries), so they cost no distance
+     computations; IVF padded lanes still run the dense ADC scan (no loop
+     to idle) but are bounded by one bucket step of slack. Valid rows are
+     bit-identical to an unpadded `index.search` either way.
+  3. **Compile cache.** Compiled callables are cached on
+     (bucket, SearchConfig, index_type, quant_kind). `n_traces` counts
+     actual traces (a Python side effect at trace time), which is both the
+     serving telemetry and the regression guard: serving many batch sizes
+     under one bucket must trace exactly once.
+  4. **Telemetry.** Each call records wall latency, per-query distance
+     counts, and early-termination fires; `stats()` folds them into an
+     `EngineStats` snapshot (p50/p95/p99, dists/query, ET fire rate, and
+     recall when ground truth is supplied).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.index import KBest
+from repro.core.types import SearchConfig
+
+
+def bucket_for(q: int, min_bucket: int = 8, max_bucket: int = 256) -> int:
+    """Smallest power-of-two >= q, clamped to [min_bucket, max_bucket]."""
+    assert q >= 1, q
+    b = 1 << (q - 1).bit_length()
+    return max(min_bucket, min(b, max_bucket))
+
+
+def bucket_ladder(min_bucket: int = 8, max_bucket: int = 256) -> Tuple[int, ...]:
+    """All buckets the engine can emit, ascending."""
+    out = []
+    b = max(1, min_bucket)
+    while b < max_bucket:
+        out.append(b)
+        b <<= 1
+    out.append(max_bucket)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Telemetry snapshot over every call since construction/reset."""
+
+    n_requests: int            # compiled calls served (post-coalescing)
+    n_queries: int             # TRUE query count (padding excluded)
+    n_traces: int              # XLA traces of the underlying search
+    cache_hits: int
+    cache_misses: int
+    lat_p50_ms: float          # per-call wall latency percentiles
+    lat_p95_ms: float
+    lat_p99_ms: float
+    mean_lat_ms: float
+    dists_per_query: float     # mean over valid lanes (cross-family units)
+    et_fire_rate: float        # fraction of valid lanes that early-terminated
+    recall_at_k: Optional[float]   # only when gt_ids were supplied
+
+    def summary(self) -> str:
+        rec = ("-" if self.recall_at_k is None
+               else f"{self.recall_at_k:.3f}")
+        return (f"requests={self.n_requests} queries={self.n_queries} "
+                f"traces={self.n_traces} "
+                f"cache={self.cache_hits}h/{self.cache_misses}m | "
+                f"lat p50={self.lat_p50_ms:.2f} p95={self.lat_p95_ms:.2f} "
+                f"p99={self.lat_p99_ms:.2f} ms | "
+                f"dists/q={self.dists_per_query:.0f} "
+                f"et_rate={self.et_fire_rate:.2f} recall={rec}")
+
+
+class SearchEngine:
+    """Serving facade over one built KBest index (graph or IVF)."""
+
+    def __init__(self, index: KBest, *, min_bucket: int = 8,
+                 max_bucket: int = 256, name: str = "default"):
+        assert index.db is not None, "serve a BUILT index (call add() first)"
+        assert min_bucket >= 1 and max_bucket >= min_bucket
+        # non-power-of-two bounds would make bucket_ladder (warmup) and
+        # bucket_for (dispatch) disagree, so warmed traffic could re-trace
+        assert min_bucket & (min_bucket - 1) == 0, min_bucket
+        assert max_bucket & (max_bucket - 1) == 0, max_bucket
+        self.index = index
+        self.name = name
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self._cache: Dict[tuple, callable] = {}
+        # telemetry accumulators
+        self.n_traces = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._lat_ms: list = []
+        self._n_queries = 0
+        self._sum_dists = 0
+        self._sum_et = 0
+        self._gt_hits = 0.0
+        self._gt_queries = 0
+
+    # ------------------------------------------------------------- compile
+    def _cache_key(self, bucket: int, scfg: SearchConfig) -> tuple:
+        cfg = self.index.config
+        return (bucket, scfg, cfg.index_type, cfg.quant.kind)
+
+    def _compiled(self, bucket: int, scfg: SearchConfig):
+        key = self._cache_key(bucket, scfg)
+        fn = self._cache.get(key)
+        if fn is None:
+            self.cache_misses += 1
+            index = self.index
+
+            def run(q, mask):
+                # Python side effect: executes once per XLA trace, never on
+                # cached executions — this IS the trace counter.
+                self.n_traces += 1
+                return index.search_padded(q, mask, search_cfg=scfg,
+                                           with_stats=True)
+
+            fn = jax.jit(run)
+            self._cache[key] = fn
+        else:
+            self.cache_hits += 1
+        return fn
+
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None,
+               k: Optional[int] = None,
+               search_cfg: Optional[SearchConfig] = None) -> int:
+        """Precompile the buckets covering `batch_sizes` (default: the whole
+        ladder) for one SearchConfig. Returns the number of fresh traces."""
+        scfg = self.index._resolve_cfg(k, search_cfg)
+        if batch_sizes is None:
+            buckets = bucket_ladder(self.min_bucket, self.max_bucket)
+        else:
+            buckets = sorted({bucket_for(b, self.min_bucket, self.max_bucket)
+                              for b in batch_sizes})
+        before = self.n_traces
+        d = self.index.db.shape[1]
+        for b in buckets:
+            q = np.zeros((b, d), np.float32)
+            mask = np.zeros((b,), bool)
+            mask[0] = True     # one live lane: exercise the real loop body
+            out = self._compiled(b, scfg)(q, mask)
+            jax.block_until_ready(out)
+        return self.n_traces - before
+
+    # -------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: Optional[int] = None,
+               search_cfg: Optional[SearchConfig] = None,
+               gt_ids: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Serve one request batch. queries: (Q, d), any Q >= 1.
+
+        Pads to the shape bucket, dispatches through the compile cache and
+        returns exactly (Q, k) results. Batches beyond max_bucket are split
+        into max_bucket chunks. When gt_ids (Q, >=k) is given, recall@k is
+        folded into the engine telemetry with the TRUE served count as the
+        denominator.
+        """
+        queries = np.asarray(queries, np.float32)
+        assert queries.ndim == 2, queries.shape
+        Q = queries.shape[0]
+        scfg = self.index._resolve_cfg(k, search_cfg)
+        if Q > self.max_bucket:
+            parts = [self.search(queries[s:s + self.max_bucket],
+                                 search_cfg=scfg,
+                                 gt_ids=None if gt_ids is None
+                                 else gt_ids[s:s + self.max_bucket])
+                     for s in range(0, Q, self.max_bucket)]
+            return (np.concatenate([p[0] for p in parts]),
+                    np.concatenate([p[1] for p in parts]))
+
+        bucket = bucket_for(Q, self.min_bucket, self.max_bucket)
+        qp = np.zeros((bucket, queries.shape[1]), np.float32)
+        qp[:Q] = queries
+        mask = np.zeros((bucket,), bool)
+        mask[:Q] = True
+
+        fn = self._compiled(bucket, scfg)
+        t0 = time.perf_counter()
+        dists, ids, stats = fn(qp, mask)
+        jax.block_until_ready((dists, ids))
+        dt_ms = (time.perf_counter() - t0) * 1e3
+
+        self._lat_ms.append(dt_ms)
+        self._n_queries += Q
+        self._sum_dists += int(np.asarray(stats.n_dist).sum())
+        self._sum_et += int(np.asarray(stats.early_terminated).sum())
+
+        dists = np.asarray(dists)[:Q]
+        ids = np.asarray(ids)[:Q]
+        if gt_ids is not None:
+            from repro.data.vectors import recall_at_k
+            self._gt_hits += recall_at_k(ids, np.asarray(gt_ids)[:Q],
+                                         scfg.k) * Q
+            self._gt_queries += Q
+        return dists, ids
+
+    # ----------------------------------------------------------- telemetry
+    def stats(self) -> EngineStats:
+        lat = np.asarray(self._lat_ms, np.float64)
+        have = lat.size > 0
+        nq = max(self._n_queries, 1)
+        return EngineStats(
+            n_requests=lat.size,
+            n_queries=self._n_queries,
+            n_traces=self.n_traces,
+            cache_hits=self.cache_hits,
+            cache_misses=self.cache_misses,
+            lat_p50_ms=float(np.percentile(lat, 50)) if have else 0.0,
+            lat_p95_ms=float(np.percentile(lat, 95)) if have else 0.0,
+            lat_p99_ms=float(np.percentile(lat, 99)) if have else 0.0,
+            mean_lat_ms=float(lat.mean()) if have else 0.0,
+            dists_per_query=self._sum_dists / nq,
+            et_fire_rate=self._sum_et / nq,
+            recall_at_k=(self._gt_hits / self._gt_queries
+                         if self._gt_queries else None),
+        )
+
+    def reset_stats(self) -> None:
+        """Clear telemetry; the compile cache (and n_traces) is kept —
+        traces are a property of the cache, not of a measurement window."""
+        self._lat_ms = []
+        self._n_queries = 0
+        self._sum_dists = 0
+        self._sum_et = 0
+        self._gt_hits = 0.0
+        self._gt_queries = 0
