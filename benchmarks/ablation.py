@@ -13,6 +13,11 @@
 Metrics: recall, distance computations/query, hops/query, CPU QPS
 (relative), and `locality` = mean |id gap| between successively expanded
 nodes (the reorder payoff a DMA engine would see).
+
+`quant_ablation` extends the study along the A4 axis (DESIGN.md §12): the
+same graph searched over full vectors, 8-bit PQ, 4-bit fast-scan PQ (with
+and without u8 LUT requantization) and SQ — recall vs code bytes/vector,
+the memory/recall trade the pq4 family exists for.
 """
 from __future__ import annotations
 
@@ -122,6 +127,58 @@ def _graph_locality(idx) -> float:
     return bandwidth_stats(np.asarray(idx.graph))["mean_gap"]
 
 
+QUANT_VARIANTS = {
+    "full": dict(kind="none"),
+    "pq8": dict(kind="pq", pq_m=16),
+    "pq4": dict(kind="pq4", pq_m=16),
+    "pq4+u8lut": dict(kind="pq4", pq_m=16, pq4_lut_u8=True),
+    "sq": dict(kind="sq"),
+}
+
+
+def quant_ablation(n: int = 2000, n_queries: int = 60,
+                   dataset: str = "bigann_like", quick: bool = False):
+    """The A4 axis: one graph build, every quantization family over it.
+
+    Reports recall (after each family's exact re-rank), code bytes/vector
+    and dists/query — the memory/recall/compute triangle of DESIGN.md §12.
+    """
+    from benchmarks.qps_recall import code_bytes_per_vector
+    from repro.core.types import QuantConfig
+
+    if quick:
+        n, n_queries = 1500, 40
+    ds = make_dataset(dataset, n=n, n_queries=n_queries, k=10)
+    b = BuildConfig(M=32, knn_k=48, builder="brute", select_rule="alpha",
+                    search_passes=1, refine_iters=1, reorder="none")
+    base_cfg = IndexConfig(dim=ds.base.shape[1], metric=ds.metric, build=b,
+                           search=SearchConfig(L=64, k=10, early_term=False))
+    base = KBest(base_cfg).add(ds.base)     # the one graph build
+    rows = []
+    for name, qkw in QUANT_VARIANTS.items():
+        cfg = dataclasses.replace(base_cfg,
+                                  quant=QuantConfig(kmeans_iters=6, **qkw))
+        # graph construction is quant-independent: share the built graph
+        # and train only the quantizer per variant
+        idx = KBest(cfg)
+        idx.db, idx.graph, idx.entry, idx.order = (base.db, base.graph,
+                                                   base.entry, base.order)
+        idx._train_quant(idx.db)
+        idx.search(ds.queries[:8], with_stats=True)     # warmup/compile
+        t0 = time.perf_counter()
+        d, i, st = idx.search(ds.queries, with_stats=True)
+        np.asarray(d)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "quant": name,
+            "recall": recall_at_k(np.asarray(i), ds.gt_ids, 10),
+            "dists": float(np.asarray(st.n_dist).mean()),
+            "code_bytes": code_bytes_per_vector(idx),
+            "qps_cpu": n_queries / dt,
+        })
+    return rows
+
+
 def main(quick=False):
     rows = run(quick=quick)
     print("stage,recall,dists_per_q,hops,qps_cpu,locality")
@@ -131,7 +188,12 @@ def main(quick=False):
     base = rows[0]["qps_cpu"]
     print("\nspeedup over base:",
           " ".join(f"{r['stage']}={r['qps_cpu']/base:.2f}x" for r in rows))
-    return rows
+    qrows = quant_ablation(quick=quick)
+    print("\nquant,recall,dists_per_q,code_bytes,qps_cpu")
+    for r in qrows:
+        print(f"{r['quant']},{r['recall']:.3f},{r['dists']:.0f},"
+              f"{r['code_bytes']},{r['qps_cpu']:.2f}")
+    return rows + qrows
 
 
 if __name__ == "__main__":

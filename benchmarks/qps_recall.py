@@ -12,6 +12,11 @@ The IVF-PQ family (DESIGN.md §4) rides the same harness as a fifth variant:
 its knob is nprobe (probed clusters) instead of L, and its cost driver is
 scanned PQ codes (~m byte-reads each) instead of full-precision distances,
 so its `dists_per_query` column counts scanned codes + re-ranked exacts.
+The 4-bit fast-scan family (DESIGN.md §12) adds ivf-pq4 rows at half the
+code bytes/vector, plus an ADC microbenchmark (adc_throughput) comparing
+pq4's (m, 16) VMEM-resident-LUT scan against 8-bit PQ's (m, 256) gather —
+`--pq4-smoke` runs a tiny config of exactly that and emits BENCH_pq4.json
+so CI tracks the perf trajectory.
 
 Wall-clock on this container is CPU-interpreted JAX, so absolute QPS is
 meaningless; the table reports (a) per-query distance computations (the
@@ -21,8 +26,10 @@ hardware-independent cost driver: QPS ∝ 1/dists at fixed hardware) and
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import KBest
@@ -47,12 +54,25 @@ IVF_PQ_M = {"glove_like": 20, "deep_like": 16, "t2i_like": 20,
             "bigann_like": 16}
 
 
-def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32)) -> list:
-    """The IVF-PQ rows: build once, sweep nprobe (the recall/cost knob)."""
+def code_bytes_per_vector(idx: KBest) -> int:
+    """Stored code bytes per database vector (the A4 memory axis)."""
+    if idx.ivf is not None:
+        return int(idx.ivf.list_codes.shape[-1])
+    if idx.pq_codes is not None:
+        return int(idx.pq_codes.shape[-1])
+    if idx.sq_codes is not None:
+        return int(idx.sq_codes.shape[-1])
+    return 4 * int(idx.db.shape[-1])            # f32 full vectors
+
+
+def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32), quant_kind: str = "pq") -> list:
+    """The IVF-PQ rows: build once, sweep nprobe (the recall/cost knob).
+    quant_kind "pq" (8-bit) or "pq4" (4-bit fast-scan, half the bytes)."""
     cfg = IndexConfig(
         dim=ds.base.shape[1], metric=ds.metric, index_type="ivf",
         ivf=IVFConfig(nlist=0, kmeans_iters=8),
-        quant=QuantConfig(kind="pq", pq_m=IVF_PQ_M[ds.name], kmeans_iters=6),
+        quant=QuantConfig(kind=quant_kind, pq_m=IVF_PQ_M[ds.name],
+                          kmeans_iters=6),
         search=SearchConfig(L=128, k=k, nprobe=8))
     idx = KBest(cfg).add(ds.base)
     rows = []
@@ -64,13 +84,62 @@ def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32)) -> list:
         np.asarray(d)
         dt = time.perf_counter() - t0
         rows.append({
-            "dataset": ds.name, "variant": "ivf-pq", "L": nprobe,
+            "dataset": ds.name, "variant": f"ivf-{quant_kind}", "L": nprobe,
             "recall": recall_at_k(np.asarray(i), ds.gt_ids, k),
             "dists_per_query": float(np.asarray(st.n_dist).mean()),
             "hops_per_query": float(np.asarray(st.n_hops).mean()),
             "qps_cpu": ds.queries.shape[0] / dt,
+            "code_bytes": code_bytes_per_vector(idx),
         })
     return rows
+
+
+def adc_throughput(ds, n_codes: int = 4096, batch: int = 64,
+                   reps: int = 5) -> dict:
+    """ADC microbenchmark: pq4 (m, 16) LUT scan vs 8-bit pq (m, 256).
+
+    Times the ref dist fn (XLA-compiled batched gather — the kernels'
+    semantic twin; interpret-mode Pallas wall-clock is meaningless on CPU)
+    over identical (Q, B) id batches and reports codes scored per second
+    plus code bytes/vector. The hardware-independent claim pq4 makes is the
+    memory one (half the code bytes, 16x smaller LUT); the measured CPU
+    ratio is the sanity check that shrinking the gather axis helps.
+    """
+    import jax
+    from repro.core import quantize as qz
+
+    base = ds.base[:n_codes]
+    q = ds.queries[:8]
+    Q = q.shape[0]
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, base.shape[0], size=(Q, batch)),
+                      jnp.int32)
+    out = {}
+    for kind in ("pq", "pq4"):
+        m = IVF_PQ_M[ds.name]
+        cfg = QuantConfig(kind=kind, pq_m=m, kmeans_iters=4)
+        st = qz.pq_train(jnp.asarray(base), cfg)
+        if kind == "pq4":
+            codes = qz.pq4_encode(st.codebooks, jnp.asarray(base))
+            tables = qz.pq4_query_tables(st.codebooks, jnp.asarray(q), ds.metric)
+            fn = qz.pq4_make_dist_fn(codes, m)
+        else:
+            codes = qz.pq_encode(st.codebooks, jnp.asarray(base))
+            tables = qz.pq_query_tables(st.codebooks, jnp.asarray(q), ds.metric)
+            fn = qz.pq_make_dist_fn(codes, m)
+        jfn = jax.jit(fn)
+        jfn(tables, ids).block_until_ready()            # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jfn(tables, ids).block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        out[kind] = {
+            "codes_per_sec": Q * batch / dt,
+            "code_bytes": int(codes.shape[-1]),
+            "lut_bytes": int(tables.shape[-1]) * 4,
+        }
+    out["pq4_speedup"] = out["pq4"]["codes_per_sec"] / out["pq"]["codes_per_sec"]
+    return out
 
 
 def run(n: int = 4000, n_queries: int = 100, k: int = 10,
@@ -80,8 +149,9 @@ def run(n: int = 4000, n_queries: int = 100, k: int = 10,
     rows = []
     for ds_name in ALL_DATASETS:
         ds = make_dataset(ds_name, n=n, n_queries=n_queries, k=k)
-        rows.extend(run_ivf(ds, k, nprobes=(4, 8, 16) if quick
-                            else (4, 8, 16, 32)))
+        nprobes = (4, 8, 16) if quick else (4, 8, 16, 32)
+        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq"))
+        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq4"))
         for variant, bkw in VARIANTS.items():
             cfg = IndexConfig(
                 dim=ds.base.shape[1], metric=ds.metric,
@@ -126,17 +196,49 @@ def qps_at_recall(rows, target=0.9):
     return out
 
 
+def pq4_smoke(out: str = "BENCH_pq4.json", n: int = 2000,
+              n_queries: int = 32) -> dict:
+    """Tiny pq4 lane for CI: ivf-pq4 vs ivf-pq rows on one dataset + the
+    ADC microbenchmark, written to `out` so the perf trajectory (ADC
+    throughput, code bytes, recall) is recorded per commit."""
+    ds = make_dataset("bigann_like", n=n, n_queries=n_queries, k=10)
+    rows = (run_ivf(ds, 10, nprobes=(8, 16), quant_kind="pq")
+            + run_ivf(ds, 10, nprobes=(8, 16), quant_kind="pq4"))
+    adc = adc_throughput(ds)
+    by_kind = {v: [r for r in rows if r["variant"] == v]
+               for v in ("ivf-pq", "ivf-pq4")}
+    # the memory claim is structural — fail the lane loudly if it drifts
+    assert by_kind["ivf-pq4"][0]["code_bytes"] * 2 == \
+        by_kind["ivf-pq"][0]["code_bytes"], "pq4 must be half of pq8 bytes"
+    report = {
+        "dataset": ds.name, "n": n, "rows": rows, "adc": adc,
+        "best_recall": {v: max(r["recall"] for r in rs)
+                        for v, rs in by_kind.items()},
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out}")
+    print(f"  code bytes/vec: pq={adc['pq']['code_bytes']} "
+          f"pq4={adc['pq4']['code_bytes']}")
+    print(f"  ADC codes/s: pq={adc['pq']['codes_per_sec']:.3g} "
+          f"pq4={adc['pq4']['codes_per_sec']:.3g} "
+          f"(pq4 {adc['pq4_speedup']:.2f}x)")
+    print(f"  best recall: {report['best_recall']}")
+    return report
+
+
 def main(quick=False):
     rows = run(quick=quick)
-    print("dataset,variant,L,recall,dists_per_query,qps_cpu")
+    print("dataset,variant,L,recall,dists_per_query,qps_cpu,code_bytes")
     for r in rows:
         print(f"{r['dataset']},{r['variant']},{r['L']},{r['recall']:.3f},"
-              f"{r['dists_per_query']:.0f},{r['qps_cpu']:.1f}")
+              f"{r['dists_per_query']:.0f},{r['qps_cpu']:.1f},"
+              f"{r.get('code_bytes', '-')}")
     print("\n# Table-4 analogue: throughput proxy (1e3/dists) @ recall>=0.9")
     best = qps_at_recall(rows, 0.9)
     for ds in ALL_DATASETS:
         line = [f"{ds:12s}"]
-        for v in list(VARIANTS) + ["ivf-pq"]:
+        for v in list(VARIANTS) + ["ivf-pq", "ivf-pq4"]:
             e = best.get((ds, v))
             line.append(f"{v}={1e3*e[0]:.2f}" if e else f"{v}=n/a")
         print("  ".join(line))
@@ -144,4 +246,14 @@ def main(quick=False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pq4-smoke", action="store_true",
+                    help="tiny pq4-vs-pq8 lane; writes --out JSON")
+    ap.add_argument("--out", default="BENCH_pq4.json")
+    args = ap.parse_args()
+    if args.pq4_smoke:
+        pq4_smoke(out=args.out)
+    else:
+        main(quick=args.quick)

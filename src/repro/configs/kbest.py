@@ -56,6 +56,17 @@ _IVF_CONFIGS = {
 }
 
 
+# pq4 presets (DESIGN.md §12): 4-bit codes are coarser per subspace, so the
+# presets spend (some of) the halved bytes on more subspaces and widen the
+# re-ranked candidate queue / probe count to hold the recall floor.
+_IVF_PQ4_CONFIGS = {
+    "glove_like": dict(dim=100, metric="ip", pq_m=20, nprobe=48, L=256),
+    "deep_like": dict(dim=96, metric="ip", pq_m=32, nprobe=32, L=192),
+    "t2i_like": dict(dim=200, metric="ip", pq_m=40, nprobe=48, L=256),
+    "bigann_like": dict(dim=128, metric="l2", pq_m=32, nprobe=48, L=384),
+}
+
+
 def index_config(dataset: str) -> IndexConfig:
     return IndexConfig(**_CONFIGS[dataset])
 
@@ -66,6 +77,18 @@ def ivf_index_config(dataset: str) -> IndexConfig:
         dim=c["dim"], metric=c["metric"], index_type="ivf",
         ivf=IVFConfig(nlist=0, kmeans_iters=10),
         quant=QuantConfig(kind="pq", pq_m=c["pq_m"], kmeans_iters=8),
+        search=SearchConfig(L=c["L"], k=10, nprobe=c["nprobe"]))
+
+
+def ivf_pq4_index_config(dataset: str) -> IndexConfig:
+    """4-bit fast-scan IVF presets (half the code bytes of ivf_index_config
+    at equal m; these double m where dim allows, trading bytes for recall).
+    The bigann_like preset is the 50k acceptance config of tests/test_pq4."""
+    c = _IVF_PQ4_CONFIGS[dataset]
+    return IndexConfig(
+        dim=c["dim"], metric=c["metric"], index_type="ivf",
+        ivf=IVFConfig(nlist=0, kmeans_iters=10),
+        quant=QuantConfig(kind="pq4", pq_m=c["pq_m"], kmeans_iters=10),
         search=SearchConfig(L=c["L"], k=10, nprobe=c["nprobe"]))
 
 

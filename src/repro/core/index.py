@@ -97,15 +97,23 @@ class KBest:
             self.order = order
 
         self.db, self.graph, self.entry = x, jnp.asarray(graph), entry
+        self._train_quant(x)
+        return self
 
-        q = cfg.quant
+    def _train_quant(self, x: jnp.ndarray) -> None:
+        """Train + encode the configured quantizer over the stored db (also
+        used to attach a different quantizer to an already-built graph,
+        e.g. the quantization ablation)."""
+        q = self.config.quant
         if q.kind == "pq":
             self.pq = qz.pq_train(x, q)
             self.pq_codes = qz.pq_encode(self.pq.codebooks, x)
+        elif q.kind == "pq4":
+            self.pq = qz.pq_train(x, q)                 # (m, 16, ds) books
+            self.pq_codes = qz.pq4_encode(self.pq.codebooks, x)  # packed
         elif q.kind == "sq":
             self.sq = qz.sq_train(x)
             self.sq_codes = qz.sq_encode(self.sq, x)
-        return self
 
     # --------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: Optional[int] = None,
@@ -185,7 +193,8 @@ class KBest:
             wide = _widen(scfg)
             _, cand, probes = ivf_mod.search_ivf(
                 self.ivf, q, scfg.nprobe, wide.L, metric,
-                impl=scfg.dist_impl)
+                impl=scfg.dist_impl,
+                lut_u8=cfg.quant.kind == "pq4" and cfg.quant.pq4_lut_u8)
             # default: re-rank the WHOLE candidate queue — the ADC scan is
             # far cheaper per candidate than graph traversal, so the exact
             # pass (L distances/query) is where IVF recall is won back
@@ -208,9 +217,13 @@ class KBest:
         entry_ids = self._entry_ids(scfg.n_entries, n)
         quant = cfg.quant.kind
 
-        if quant == "pq":
-            tables = qz.pq_query_tables(self.pq.codebooks, q, metric)
-            dist_fn = self._get_dist_fn("pq", scfg.dist_impl)
+        if quant in ("pq", "pq4"):
+            if quant == "pq":
+                tables = qz.pq_query_tables(self.pq.codebooks, q, metric)
+            else:
+                tables = qz.pq4_query_tables(self.pq.codebooks, q, metric,
+                                             lut_u8=cfg.quant.pq4_lut_u8)
+            dist_fn = self._get_dist_fn(quant, scfg.dist_impl)
             dists, ids, stats = search_mod.search(
                 self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
                 n_total=n, valid_mask=valid_mask)
@@ -273,8 +286,10 @@ class KBest:
                 fn = search_mod.make_dist_fn(self.db, metric, impl)
             elif kind == "pq":
                 fn = qz.pq_make_dist_fn(self.pq_codes, self.pq.m, impl)
+            elif kind == "pq4":
+                fn = qz.pq4_make_dist_fn(self.pq_codes, self.pq.m, impl)
             elif kind == "sq":
-                fn = qz.sq_make_dist_fn(self.sq_codes, self.sq, metric)
+                fn = qz.sq_make_dist_fn(self.sq_codes, self.sq, metric, impl)
             else:
                 raise ValueError(kind)
             self._dist_fns[key] = fn
@@ -325,12 +340,18 @@ class KBest:
         np.savez_compressed(p, **arrs)
         meta = {"entry": self.entry,
                 "config": _config_to_dict(self.config)}
-        p.with_suffix(".json").write_text(json.dumps(meta))
+        # append ".json" to the FULL name: with_suffix(".json") used to map
+        # both save("a.graph") and save("a.ivf") onto "a.json", so two
+        # indexes sharing a stem clobbered each other's metadata
+        _meta_path(p).write_text(json.dumps(meta))
 
     @classmethod
     def load(cls, path: str) -> "KBest":
         p = Path(path)
-        meta = json.loads(p.with_suffix(".json").read_text())
+        mp = _meta_path(p)
+        if not mp.exists() and p.with_suffix(".json").exists():
+            mp = p.with_suffix(".json")     # pre-fix saves (load-compat)
+        meta = json.loads(mp.read_text())
         cfg = _config_from_dict(meta["config"])
         idx = cls(cfg)
         with np.load(p if p.suffix == ".npz" else str(p) + ".npz") as z:
@@ -344,7 +365,8 @@ class KBest:
                     list_ids=jnp.asarray(z["ivf_list_ids"]),
                     list_codes=jnp.asarray(z["ivf_list_codes"]),
                     pq=qz.PQState(books, books.shape[0], books.shape[2]),
-                    residual=cfg.ivf.residual)
+                    residual=cfg.ivf.residual,
+                    packed=cfg.quant.kind == "pq4")
             if "pq_codebooks" in z:
                 books = jnp.asarray(z["pq_codebooks"])
                 idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
@@ -378,6 +400,20 @@ def _edge_weights(db: jnp.ndarray, graph: jnp.ndarray, metric: str) -> jnp.ndarr
     return jnp.where(jnp.isfinite(w), w, 0.0)
 
 
+def _meta_path(p: Path) -> Path:
+    """Metadata sidecar: the FULL array-file name + ".json" (so "a.graph"
+    and "a.ivf" get distinct sidecars, unlike with_suffix)."""
+    return p.with_name(p.name + ".json")
+
+
+def _known_fields(cls, d: dict) -> dict:
+    """Drop keys a (possibly older) checkout's dataclass doesn't know, so
+    metadata written by newer versions (e.g. pq4-era QuantConfig fields)
+    still loads instead of raising TypeError."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    return {k: v for k, v in d.items() if k in names}
+
+
 def _config_to_dict(cfg: IndexConfig) -> dict:
     return dataclasses.asdict(cfg)
 
@@ -387,8 +423,8 @@ def _config_from_dict(d: dict) -> IndexConfig:
     return IndexConfig(
         dim=d["dim"], metric=d["metric"],
         index_type=d.get("index_type", "graph"),
-        build=BuildConfig(**d["build"]),
-        search=SearchConfig(**d["search"]),
-        quant=QuantConfig(**d["quant"]),
-        ivf=IVFConfig(**d.get("ivf", {})),
+        build=BuildConfig(**_known_fields(BuildConfig, d["build"])),
+        search=SearchConfig(**_known_fields(SearchConfig, d["search"])),
+        quant=QuantConfig(**_known_fields(QuantConfig, d["quant"])),
+        ivf=IVFConfig(**_known_fields(IVFConfig, d.get("ivf", {}))),
     )

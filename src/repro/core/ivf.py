@@ -6,7 +6,10 @@ DENSE ARRAYS — `list_ids (nlist, max_len)` int32 with -1 padding and
 `list_codes (nlist, max_len, m)` uint8 — not ragged CPU-style postings, so a
 probed list is one contiguous DMA and the batched ADC scan (H1's 2-D lift)
 runs without gather/scatter inside the kernel. `max_len` is padded to the
-lane-width multiple (H3 alignment analogue, IVFConfig.list_pad).
+lane-width multiple (H3 alignment analogue, IVFConfig.list_pad). With
+QuantConfig.kind="pq4" (DESIGN.md §12) the fine codes are 4-bit and
+nibble-packed — `list_codes (nlist, max_len, m//2)`, half the bytes —
+and the scan dispatches to the pq4_ivf_scan kernel.
 
 Search pipeline (mirrors the three-stage ScaNN/KScaNN shape):
   1. coarse probe: exact query-to-centroid distances, top-nprobe clusters
@@ -45,9 +48,11 @@ class IVFState:
 
     centroids: jnp.ndarray    # (nlist, d) f32 coarse codebook
     list_ids: jnp.ndarray     # (nlist, max_len) i32, -1 padded
-    list_codes: jnp.ndarray   # (nlist, max_len, m) u8 residual PQ codes
-    pq: qz.PQState            # fine codebooks (m, 256, ds)
+    list_codes: jnp.ndarray   # (nlist, max_len, m) u8 residual PQ codes,
+                              # or (nlist, max_len, m//2) nibble-packed pq4
+    pq: qz.PQState            # fine codebooks (m, K, ds); K=256 pq / 16 pq4
     residual: bool
+    packed: bool = False      # True => pq4 nibble-packed list_codes
 
     @property
     def nlist(self) -> int:
@@ -80,7 +85,10 @@ def build_ivf(x: jnp.ndarray, ivf_cfg: IVFConfig, quant_cfg: QuantConfig
 
     vecs = x - cents[assign] if ivf_cfg.residual else x
     pq = qz.pq_train(vecs, quant_cfg)
-    codes = qz.pq_encode(pq.codebooks, vecs)            # (n, m)
+    packed = quant_cfg.kind == "pq4"
+    codes = qz.pq_encode(pq.codebooks, vecs)            # (n, m), values < K
+    if packed:
+        codes = qz.pq4_pack(codes)                      # (n, m//2)
 
     # host-side list layout: bucket ids by cluster, pad to a common max_len
     # (vectorized: stable sort by cluster, then scatter each point to its
@@ -94,13 +102,13 @@ def build_ivf(x: jnp.ndarray, ivf_cfg: IVFConfig, quant_cfg: QuantConfig
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
     slot = np.arange(n) - starts[assign_h[order]]       # rank within cluster
     list_ids = np.full((nlist, max_len), -1, np.int32)
-    list_codes = np.zeros((nlist, max_len, pq.m), np.uint8)
+    list_codes = np.zeros((nlist, max_len, codes_h.shape[1]), np.uint8)
     list_ids[assign_h[order], slot] = order.astype(np.int32)
     list_codes[assign_h[order], slot] = codes_h[order]
 
     return IVFState(centroids=cents, list_ids=jnp.asarray(list_ids),
                     list_codes=jnp.asarray(list_codes), pq=pq,
-                    residual=ivf_cfg.residual)
+                    residual=ivf_cfg.residual, packed=packed)
 
 
 # --------------------------------------------------------------------- search
@@ -114,7 +122,7 @@ def select_probes(state: IVFState, q: jnp.ndarray, nprobe: int, metric: str
 
 
 def query_luts(state: IVFState, q: jnp.ndarray, probes: jnp.ndarray,
-               metric: str
+               metric: str, lut_u8: bool = False
                ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """ADC tables (Q, Pl, m, K) plus an optional per-probe bias (Q, P).
 
@@ -129,12 +137,13 @@ def query_luts(state: IVFState, q: jnp.ndarray, probes: jnp.ndarray,
     Q, P = probes.shape
     books = state.pq.codebooks
     m, K, _ = books.shape
+    requant = qz.pq4_requant_lut if lut_u8 else (lambda t: t)
     if metric == "l2" and state.residual:
         cents = state.centroids[probes]                 # (Q, P, d)
         qr = q[:, None, :] - cents
-        lut = qz.pq_query_tables(books, qr.reshape(Q * P, -1), "l2")
+        lut = requant(qz.pq_query_tables(books, qr.reshape(Q * P, -1), "l2"))
         return lut.reshape(Q, P, m, K), None
-    lut = qz.pq_query_tables(books, q, metric).reshape(Q, 1, m, K)
+    lut = requant(qz.pq_query_tables(books, q, metric)).reshape(Q, 1, m, K)
     if metric != "l2" and state.residual:
         bias = -jnp.einsum("qd,qpd->qp", q, state.centroids[probes])
         return lut, bias
@@ -150,12 +159,12 @@ def scan_lists(state: IVFState, luts: jnp.ndarray, probes: jnp.ndarray,
     Lp = min(L, state.max_len)
     if impl == "kernel":
         from repro.kernels import ops as kops
-        pd, pi = kops.ivf_scan(luts, state.list_codes, state.list_ids,
-                               probes, L=Lp)
+        scan = kops.pq4_ivf_scan if state.packed else kops.ivf_scan
+        pd, pi = scan(luts, state.list_codes, state.list_ids, probes, L=Lp)
     else:
-        from repro.kernels.ref import ivf_scan_ref
-        pd, pi = ivf_scan_ref(luts, state.list_codes, state.list_ids,
-                              probes, Lp)
+        from repro.kernels.ref import ivf_scan_ref, pq4_ivf_scan_ref
+        scan = pq4_ivf_scan_ref if state.packed else ivf_scan_ref
+        pd, pi = scan(luts, state.list_codes, state.list_ids, probes, Lp)
     if bias is not None:
         pd = pd + bias[:, :, None]      # +inf padding stays +inf
     Q = probes.shape[0]
@@ -168,7 +177,7 @@ def scan_lists(state: IVFState, luts: jnp.ndarray, probes: jnp.ndarray,
 
 
 def search_ivf(state: IVFState, q: jnp.ndarray, nprobe: int, L: int,
-               metric: str, impl: str = "ref"
+               metric: str, impl: str = "ref", lut_u8: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Stages 1+2 of the pipeline: probe, scan, merge.
 
@@ -177,7 +186,7 @@ def search_ivf(state: IVFState, q: jnp.ndarray, nprobe: int, L: int,
     can derive scan-cost stats from the probe set (see scanned_counts).
     """
     probes = select_probes(state, q, nprobe, metric)
-    luts, bias = query_luts(state, q, probes, metric)
+    luts, bias = query_luts(state, q, probes, metric, lut_u8=lut_u8)
     dists, ids = scan_lists(state, luts, probes, L, impl, bias=bias)
     return dists, ids, probes
 

@@ -10,10 +10,20 @@ can be swapped without touching the search core; we mirror that:
   Quantizer.make_dist_fn() -> DistFn consuming (tables, nbr_ids)
 
 PQ distance is ADC (asymmetric distance computation): per query build an
-(m, 256) lookup table of subspace distances; a database code (m,) uint8 then
-costs m table reads. On TPU the LUT gather is computed either by
-take_along_axis (ref) or the pq_adc Pallas kernel via one-hot contraction on
-the MXU (DESIGN.md §2).
+(m, K) lookup table of subspace distances; a database code (m,) then costs m
+table reads. On TPU the LUT gather is computed either by take_along_axis
+(ref) or the pq_adc Pallas kernel via one-hot contraction on the MXU
+(DESIGN.md §2).
+
+Two PQ code widths (DESIGN.md §12):
+  kind="pq"  — 8-bit codes, K=256 centroids/sub-codebook, one byte/code.
+  kind="pq4" — 4-bit fast-scan codes, K=16, TWO codes packed per byte
+               (low nibble = even subspace 2j, high nibble = odd 2j+1).
+               The (m, 16) LUT is 16x smaller, so it stays resident in
+               VMEM/registers during the scan; optionally the LUT is
+               requantized to u8 per query (pq4_requant_lut) as in x86
+               fast-scan, trading a bounded distance error (<= m*step/2)
+               for byte-wide table arithmetic.
 """
 from __future__ import annotations
 
@@ -58,19 +68,25 @@ def kmeans(x: jnp.ndarray, k: int, iters: int, seed: int = 0) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class PQState:
-    codebooks: jnp.ndarray  # (m, 256, ds)
+    codebooks: jnp.ndarray  # (m, K, ds); K=256 for pq, 16 for pq4
     m: int
     ds: int
 
+    @property
+    def ksub(self) -> int:
+        return self.codebooks.shape[1]
+
 
 def pq_train(db: jnp.ndarray, cfg: QuantConfig) -> PQState:
+    """Train per-subspace codebooks; K follows cfg.kind (256 or 16)."""
     n, d = db.shape
     m = cfg.pq_m
     assert d % m == 0, f"dim {d} not divisible by pq_m {m}"
     ds = d // m
+    K = cfg.ksub if cfg.kind in ("pq", "pq4") else 256
     subs = db.reshape(n, m, ds).transpose(1, 0, 2)  # (m, n, ds)
     books = jnp.stack([
-        kmeans(subs[j], 256, cfg.kmeans_iters, seed=cfg.seed + j)
+        kmeans(subs[j], K, cfg.kmeans_iters, seed=cfg.seed + j)
         for j in range(m)
     ])
     return PQState(codebooks=books, m=m, ds=ds)
@@ -133,6 +149,86 @@ def pq_make_dist_fn(codes: jnp.ndarray, m: int, impl: str = "ref"):
 
 
 # --------------------------------------------------------------------------
+# 4-bit fast-scan product quantization (DESIGN.md §12)
+# --------------------------------------------------------------------------
+def pq4_pack(codes: jnp.ndarray) -> jnp.ndarray:
+    """(n, m) 4-bit codes (values < 16) -> (n, m//2) uint8, two per byte.
+
+    Byte j holds subspace 2j in the LOW nibble and 2j+1 in the HIGH nibble,
+    so a SIMD lane reading byte j serves two adjacent LUT rows.
+    """
+    n, m = codes.shape
+    assert m % 2 == 0, m
+    c = codes.astype(jnp.uint8)
+    return (c[:, 0::2] | (c[:, 1::2] << 4)).astype(jnp.uint8)
+
+
+def pq4_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., m//2) packed bytes -> (..., m) int32 codes in [0, 16)."""
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1]
+                                                + (2 * packed.shape[-1],))
+
+
+def pq4_encode(state_books: jnp.ndarray, db: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) -> (n, m//2) uint8 nibble-packed codes (codebooks (m, 16, ds))."""
+    assert state_books.shape[1] == 16, state_books.shape
+    return pq4_pack(pq_encode(state_books, db))
+
+
+def pq4_requant_lut(lut: jnp.ndarray) -> jnp.ndarray:
+    """Fast-scan LUT requantization, applied per query.
+
+    Each query's table is affinely mapped to u8 (step = (max-min)/255 over
+    the whole (m, K) table) and mapped back, so every downstream consumer —
+    ref gather, Pallas kernel, tests — sees exactly the distances a u8
+    table walk would produce. The ADC sum error is bounded by m*step/2
+    (each of the m reads is off by at most step/2); on real hardware the u8
+    table is what lives in registers and this fold-back is free.
+
+    lut: (Q, T) flattened tables. Returns same-shape f32.
+    """
+    lo = jnp.min(lut, axis=1, keepdims=True)
+    hi = jnp.max(lut, axis=1, keepdims=True)
+    step = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q = jnp.clip(jnp.round((lut - lo) / step), 0, 255)
+    return q * step + lo
+
+
+def pq4_query_tables(state_books: jnp.ndarray, queries: jnp.ndarray,
+                     metric: str, lut_u8: bool = False) -> jnp.ndarray:
+    """Per-query (m, 16) ADC tables, flattened to (Q, m*16).
+
+    Same algebra as pq_query_tables (K=16); with lut_u8 the table goes
+    through the fast-scan u8 requantization (pq4_requant_lut).
+    """
+    lut = pq_query_tables(state_books, queries, metric)
+    return pq4_requant_lut(lut) if lut_u8 else lut
+
+
+def pq4_make_dist_fn(packed: jnp.ndarray, m: int, impl: str = "ref"):
+    """DistFn over nibble-packed PQ4 codes; `tables` is (Q, m*16)."""
+    K = 16
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def fn(tables, nbr_ids):
+            return kops.pq4_adc(tables.reshape(tables.shape[0], m, K),
+                                packed, nbr_ids)
+        return fn
+
+    def fn(tables, nbr_ids):
+        Q = tables.shape[0]
+        lut = tables.reshape(Q, m, K)
+        c = pq4_unpack(packed[jnp.maximum(nbr_ids, 0)])   # (Q, B, m) i32
+        g = jnp.take_along_axis(lut[:, None, :, :], c[..., None], axis=-1)[..., 0]
+        return jnp.sum(g, axis=-1)
+    return fn
+
+
+# --------------------------------------------------------------------------
 # Scalar quantization (int8 per-dimension affine)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -159,8 +255,24 @@ def _sq_encode(scale: jnp.ndarray, zero: jnp.ndarray, db: jnp.ndarray
     return jnp.clip(q, 0, 255).astype(jnp.uint8)
 
 
-def sq_make_dist_fn(codes: jnp.ndarray, state: SQState, metric: str):
-    """DistFn with on-the-fly dequantization (fused in the kernel path)."""
+def sq_make_dist_fn(codes: jnp.ndarray, state: SQState, metric: str,
+                    impl: str = "ref"):
+    """DistFn with on-the-fly dequantization.
+
+    impl="kernel" routes through the fused sq_gather_dist Pallas kernel
+    (u8 rows gathered by scalar-prefetch, dequantized in-VMEM); impl="ref"
+    is the jnp gather+dequant oracle. Historical bug: this function used to
+    ignore `impl`, so dist_impl="kernel" SQ runs silently took — and were
+    benchmarked as — the ref path under a ("sq", "kernel") cache key.
+    """
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def fn(queries, nbr_ids):
+            return kops.sq_gather_dist(queries, codes, state.scale,
+                                       state.zero, nbr_ids, metric=metric)
+        return fn
+
     from repro.core.distance import batched_one_to_many
 
     def fn(queries, nbr_ids):

@@ -140,15 +140,24 @@ def search(
     if cfg.visited_mode == "bitmap":
         bitmap = jax.vmap(_bitmap_set)(bitmap, e_ids)
 
+    # seed distances count: the init dist_fn call above already computed one
+    # distance per valid entry seed — starting ndist at 0 undercounted every
+    # family's n_dist by n_entries (benchmarks, EngineStats dists/query).
+    # Gated on the lane being valid: padded lanes must keep the documented
+    # "invalid lanes add no distance computations" invariant.
+    active0 = (jnp.ones((Q,), bool) if valid_mask is None
+               else valid_mask.astype(bool))
+    n_seed = jnp.where(active0,
+                       jnp.sum(e_ids >= 0, axis=1), 0).astype(jnp.int32)
+
     carry = _Carry(
         dists=queue.dists, ids=queue.ids, visited=queue.visited,
         bitmap=bitmap,
         et_ctr=jnp.zeros((Q,), jnp.int32),
         et_fired=jnp.zeros((Q,), bool),
-        active=(jnp.ones((Q,), bool) if valid_mask is None
-                else valid_mask.astype(bool)),
+        active=active0,
         hops=jnp.zeros((Q,), jnp.int32),
-        ndist=jnp.zeros((Q,), jnp.int32),
+        ndist=n_seed,
         it=jnp.int32(0),
     )
 

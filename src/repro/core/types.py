@@ -78,18 +78,44 @@ class SearchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """Vector quantization (paper §3.2, A4). kind: "none" | "pq" | "sq"."""
+    """Vector quantization (paper §3.2, A4).
+
+    kind: "none" | "pq" (8-bit, 256-centroid sub-codebooks) | "pq4" (4-bit
+    fast-scan: 16-centroid sub-codebooks, two codes packed per byte, LUT
+    small enough to stay VMEM/register resident — DESIGN.md §12) | "sq"
+    (int8 per-dimension affine).
+    """
 
     kind: str = "none"
     pq_m: int = 8                # number of PQ subspaces
-    pq_bits: int = 8             # bits per code (256 centroids)
+    pq_bits: int = 8             # bits per code for kind="pq" (256 centroids)
+    pq4_lut_u8: bool = False     # fast-scan style per-query u8 LUT requant
     kmeans_iters: int = 10
     rerank: int = 0              # exact re-rank depth (0 => 4*k at search)
     seed: int = 0
 
     def __post_init__(self):
-        assert self.kind in ("none", "pq", "sq")
-        assert self.pq_bits == 8, "only 8-bit codes are implemented"
+        assert self.kind in ("none", "pq", "pq4", "sq")
+        if self.kind == "pq4":
+            # nbits is authoritative (4); tolerate an explicit pq_bits=4 or
+            # the untouched default 8 rather than crash on the natural call
+            # QuantConfig(kind="pq4", pq_bits=4)
+            assert self.pq_bits in (4, 8), \
+                f"pq4 codes are 4-bit (pq_bits ignored), got {self.pq_bits}"
+            assert self.pq_m % 2 == 0, \
+                f"pq4 packs two codes per byte: pq_m must be even, got {self.pq_m}"
+        else:
+            assert self.pq_bits == 8, "kind='pq' is 8-bit; use kind='pq4' for 4"
+
+    @property
+    def nbits(self) -> int:
+        """Bits per PQ code (4 for the fast-scan family, else pq_bits)."""
+        return 4 if self.kind == "pq4" else self.pq_bits
+
+    @property
+    def ksub(self) -> int:
+        """Centroids per sub-codebook (16 for pq4, 256 for pq)."""
+        return 1 << self.nbits
 
 
 @dataclasses.dataclass(frozen=True)

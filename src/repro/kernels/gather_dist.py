@@ -77,3 +77,58 @@ def gather_dist(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray, *,
         interpret=interpret,
     )(safe_ids, q, db)
     return jnp.where(ids >= 0, out, jnp.inf)
+
+
+# ---------------------------------------------------------- fused SQ variant
+def _sq_kernel_l2(idx_ref, q_ref, row_ref, scale_ref, zero_ref, o_ref):
+    # row_ref: (1, d) uint8 codes — dequantized in VMEM, never materialized
+    # as an f32 database (the whole point of the SQ store)
+    q = q_ref[...].astype(jnp.float32)
+    r = (row_ref[...].astype(jnp.float32) * scale_ref[...] + zero_ref[...])
+    diff = r - q
+    o_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+def _sq_kernel_ip(idx_ref, q_ref, row_ref, scale_ref, zero_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    r = (row_ref[...].astype(jnp.float32) * scale_ref[...] + zero_ref[...])
+    o_ref[...] = -jnp.sum(r * q, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def sq_gather_dist(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, ids: jnp.ndarray, *,
+                   metric: str = "l2", interpret: bool = False) -> jnp.ndarray:
+    """Fused SQ gather + dequant + distance (the kernel path sq_make_dist_fn
+    used to silently skip). Same prefetch-gather structure as gather_dist,
+    but the DMA'd rows are (1, d) uint8 — a quarter of the f32 traffic —
+    and the affine dequant (code * scale + zero) runs in-kernel against the
+    VMEM-resident (1, d) scale/zero rows.
+
+    q (Q, d) f32, codes (n, d) u8, scale/zero (1, d) f32, ids (Q, M) i32.
+    """
+    Q, d = q.shape
+    M = ids.shape[1]
+    assert ids.shape[0] == Q and codes.shape[1] == d
+    assert scale.shape == (1, d) and zero.shape == (1, d)
+    safe_ids = jnp.maximum(ids, 0)
+    kernel = _sq_kernel_l2 if metric == "l2" else _sq_kernel_ip
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, M), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, q, codes, scale, zero)
+    return jnp.where(ids >= 0, out, jnp.inf)

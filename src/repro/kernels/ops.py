@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import batch_dist as _bd
 from repro.kernels import gather_dist as _gd
 from repro.kernels import ivf_scan as _iv
+from repro.kernels import pq4_scan as _p4
 from repro.kernels import pq_adc as _pq
 
 LANE = 128
@@ -59,6 +60,27 @@ def pq_adc(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
     return _pq.pq_adc(lut, codes, ids, interpret=_on_cpu())
 
 
+def pq4_adc(lut: jnp.ndarray, packed: jnp.ndarray, ids: jnp.ndarray
+            ) -> jnp.ndarray:
+    """(Q, m, 16), (n, m//2) u8 nibble-packed, (Q, B) -> (Q, B); -1 -> +inf."""
+    return _p4.pq4_adc(lut, packed, ids, interpret=_on_cpu())
+
+
+def sq_gather_dist(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, ids: jnp.ndarray, *,
+                   metric: str = "l2") -> jnp.ndarray:
+    """Fused SQ gather+dequant+distance: (Q, d), (n, d) u8, (d,), (d,),
+    (Q, M) -> (Q, M); -1 ids produce +inf. Padding keeps the dequant exact:
+    padded columns get scale=0/zero=0 so they dequantize to 0, matching the
+    zero-padded query columns."""
+    qp = _pad_dim(q, 1, LANE)
+    cp = _pad_dim(codes, 1, LANE)
+    sp = _pad_dim(scale.reshape(1, -1), 1, LANE)
+    zp = _pad_dim(zero.reshape(1, -1), 1, LANE)
+    return _gd.sq_gather_dist(qp, cp, sp, zp, ids, metric=metric,
+                              interpret=_on_cpu())
+
+
 def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
              list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *, L: int):
     """(Q, Pl, m, K) luts (Pl in {1, P}), padded lists, (Q, P) probes ->
@@ -73,3 +95,15 @@ def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
         L = min(1 << (L - 1).bit_length(), list_ids.shape[1])
     return _iv.ivf_scan(luts, list_codes, list_ids, probe_ids, L=L,
                         interpret=interp)
+
+
+def pq4_ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
+                 list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *, L: int):
+    """pq4 twin of ivf_scan: (Q, Pl, m, 16) luts, (nlist, max_len, m//2)
+    nibble-packed list codes. Same L clamping/rounding policy."""
+    interp = _on_cpu()
+    L = min(L, list_ids.shape[1])
+    if not interp:
+        L = min(1 << (L - 1).bit_length(), list_ids.shape[1])
+    return _p4.pq4_ivf_scan(luts, list_codes, list_ids, probe_ids, L=L,
+                            interpret=interp)

@@ -1,0 +1,160 @@
+"""pq4_scan — 4-bit fast-scan PQ ADC kernels (DESIGN.md §12).
+
+x86 fast-scan (and its ARM port, the "ARM 4-bit PQ" line of work) shrinks
+PQ sub-codebooks to 16 centroids so the whole (m, 16) lookup table fits in
+SIMD registers and the LUT gather becomes an in-register byte shuffle. The
+TPU analogue implemented here: the table is 16x smaller than 8-bit PQ's
+(m, 256), so it stays RESIDENT IN VMEM across the whole scan (no per-step
+LUT traffic), codes arrive nibble-packed (two per byte — half the DMA
+bytes of pq_adc), and the gather is the same one-hot MXU contraction with a
+16-wide, rather than 256-wide, contraction axis.
+
+Two kernels share the nibble-unpack + one-hot idiom:
+
+  pq4_adc      — graph-path gather ADC, grid (Q, B): the packed code row of
+                 neighbor ids[q, b] is fetched by scalar-prefetch (H2, same
+                 mechanism as pq_adc/gather_dist) and scored against query
+                 q's VMEM-resident LUT.
+  pq4_ivf_scan — IVF list scan + per-list partial top-L, grid (Q, P): the
+                 pq4 twin of ivf_scan (same prefetch-driven list DMA, same
+                 in-kernel top-L partial reduction), consuming packed
+                 (nlist, max_len, m//2) list codes.
+
+Nibble layout (core/quantize.py: pq4_pack): byte j = subspace 2j in the low
+nibble, 2j+1 in the high nibble; the kernels unpack with a mask/shift pair
+and interleave back to (m,) code rows.
+
+NOTE: in-kernel top_k is interpret-exact on CPU; Mosaic lowers it via
+bitonic sort on real TPU — keep L a power of two there (ops.py rounds).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+K4 = 16  # centroids per 4-bit sub-codebook
+
+
+def _unpack_rows(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., m//2) i32 packed bytes -> (..., m) i32 codes in [0, 16)."""
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+# ------------------------------------------------------------ graph gather
+def _adc_kernel(idx_ref, lut_ref, code_ref, o_ref):
+    lut = lut_ref[...].astype(jnp.float32)        # (1, m, 16)
+    packed = code_ref[...].astype(jnp.int32)      # (1, m//2)
+    m, K = lut.shape[1], lut.shape[2]
+    code = _unpack_rows(packed[0])                # (m,)
+    onehot = (code[:, None] == jax.lax.broadcasted_iota(jnp.int32, (m, K), 1)
+              ).astype(jnp.float32)               # (m, 16)
+    o_ref[...] = jnp.sum(lut[0] * onehot).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq4_adc(lut: jnp.ndarray, packed: jnp.ndarray, ids: jnp.ndarray, *,
+            interpret: bool = False) -> jnp.ndarray:
+    """(Q, m, 16) luts, (n, m//2) u8 packed codes, (Q, B) ids -> (Q, B) f32."""
+    Q, m, K = lut.shape
+    assert K == K4, K
+    mh = packed.shape[1]
+    assert mh * 2 == m, (mh, m)
+    B = ids.shape[1]
+    assert ids.shape[0] == Q
+    safe_ids = jnp.maximum(ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, B),
+        in_specs=[
+            # LUT block depends only on q: it is DMA'd once per query row
+            # and stays VMEM-resident across the B inner steps
+            pl.BlockSpec((1, m, K), lambda i, j, idx_ref: (i, 0, 0)),
+            pl.BlockSpec((1, mh), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        _adc_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, B), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, lut, packed)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+# ---------------------------------------------------------------- IVF scan
+def _make_scan_kernel(L: int):
+    def _kernel(pids_ref, lut_ref, codes_ref, ids_ref, od_ref, oi_ref):
+        lut = lut_ref[0, 0].astype(jnp.float32)          # (m, 16)
+        packed = codes_ref[0].astype(jnp.int32)          # (max_len, m//2)
+        ids = ids_ref[0]                                 # (max_len,)
+        m, K = lut.shape
+        max_len = packed.shape[0]
+        codes = _unpack_rows(packed)                     # (max_len, m)
+        # gather-as-matmul: onehot (max_len, m*16) @ lut (m*16, 1) — the
+        # contraction axis is 16x shorter than ivf_scan's, same MXU idiom
+        onehot = (codes[:, :, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (max_len, m, K), 2)
+                  ).astype(jnp.float32)
+        d = jax.lax.dot_general(
+            onehot.reshape(max_len, m * K), lut.reshape(m * K, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]    # (max_len,)
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        neg, pos = jax.lax.top_k(-d, L)
+        od_ref[0, 0] = -neg
+        oi_ref[0, 0] = jnp.where(jnp.isfinite(neg), ids[pos], -1)
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("L", "interpret"))
+def pq4_ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
+                 list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *,
+                 L: int, interpret: bool = False):
+    """Scan probed inverted lists of nibble-packed codes (pq4 ivf_scan twin).
+
+    luts:       (Q, Pl, m, 16) f32, Pl in {1, P} (see ivf_scan)
+    list_codes: (nlist, max_len, m//2) uint8 packed codes
+    list_ids:   (nlist, max_len) i32, -1 padding
+    probe_ids:  (Q, P) i32
+    Returns (dists (Q, P, L) ascending, ids (Q, P, L), -1 padding).
+    """
+    Q, Pl, m, K = luts.shape
+    assert K == K4, K
+    P = probe_ids.shape[1]
+    nlist, max_len, mh = list_codes.shape
+    assert mh * 2 == m, (mh, m)
+    assert Pl in (1, P), (Pl, P)
+    assert list_ids.shape == (nlist, max_len)
+    assert L <= max_len, (L, max_len)
+    lut_j = (lambda i, j, pids: (i, j, 0, 0)) if Pl == P else \
+        (lambda i, j, pids: (i, 0, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, K), lut_j),
+            pl.BlockSpec((1, max_len, mh), lambda i, j, pids: (pids[i, j], 0, 0)),
+            pl.BlockSpec((1, max_len), lambda i, j, pids: (pids[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L), lambda i, j, pids: (i, j, 0)),
+            pl.BlockSpec((1, 1, L), lambda i, j, pids: (i, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _make_scan_kernel(L),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q, P, L), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, P, L), jnp.int32)],
+        interpret=interpret,
+    )(probe_ids, luts, list_codes, list_ids)

@@ -46,6 +46,33 @@ def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
     return jnp.where(ids >= 0, out, jnp.inf)
 
 
+def _unpack_nibbles_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., m//2) packed bytes -> (..., m) i32 codes (low nibble first)."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0x0F
+    hi = (p >> 4) & 0x0F
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+def pq4_adc_ref(lut: jnp.ndarray, packed: jnp.ndarray, ids: jnp.ndarray
+                ) -> jnp.ndarray:
+    """(Q, m, 16) luts, (n, m//2) u8 nibble-packed codes, (Q, B) ids ->
+    (Q, B) ADC dists; invalid ids -> +inf. Unpack-then-pq_adc semantics."""
+    c = _unpack_nibbles_ref(packed[jnp.maximum(ids, 0)])      # (Q, B, m)
+    g = jnp.take_along_axis(lut[:, None, :, :], c[..., None], axis=-1)[..., 0]
+    out = jnp.sum(g, axis=-1)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def pq4_ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
+                     list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
+    """pq4 twin of ivf_scan_ref: (nlist, max_len, m//2) packed list codes
+    are unpacked to (nlist, max_len, m) and scanned identically."""
+    return ivf_scan_ref(luts, _unpack_nibbles_ref(list_codes), list_ids,
+                        probe_ids, L)
+
+
 def ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
                  list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
     """(Q, Pl, m, K) luts (Pl = P, or 1 for probe-independent tables),

@@ -2,12 +2,14 @@
 
 Covers the serving tentpole (shape-bucketed compile cache, padded-lane
 bit-identity, coalescing scheduler with true served-count accounting) and
-the four search-path bugfixes that shipped with it:
+the search-path bugfixes that shipped with and after it:
   1. duplicate entry seeds corrupting the visited bitmap (scatter-add carry)
   2. partial-batch recall denominators (served-count accounting)
   3. graph-quantized n_dist excluding exact re-rank distances (cross-family
      comparability with the IVF path)
   4. `search(q, k=K)` with K > SearchConfig.L asserting instead of widening
+  5. n_dist excluding the entry-seed distances computed at traversal init
+     (undercounted by n_entries across every graph family)
 """
 import dataclasses
 
@@ -253,6 +255,82 @@ def test_ivf_and_graph_ndist_same_units(tiny_ds, tiny_index):
         search=SearchConfig(L=64, k=10, nprobe=4))).add(tiny_ds.base)
     _, _, st = ivf.search(tiny_ds.queries[:8], with_stats=True)
     assert np.all(np.asarray(st.n_dist) >= 12)
+
+
+# --------------------------------- bugfix 5: n_dist counts the entry seeds
+def test_ndist_counts_entry_seeds_all_graph_families(tiny_ds):
+    """Seed-inclusive n_dist accounting, pinned exactly.
+
+    On a corpus small enough that L >= n, bitmap mode computes every
+    reachable node's distance exactly once, so n_dist must equal the
+    BFS-reachable count FROM THE SEED SET (seeds included — the init
+    dist_fn call computes them) plus, for quantized families, the exact
+    re-rank depth. Pre-fix, ndist started at 0 after the seed distances
+    were already computed, undercounting every family by n_entries —
+    equivalently, n_dist changed when n_entries changed, which this pins
+    against across full/PQ/PQ4/SQ."""
+    import collections
+
+    base, n, k = tiny_ds.base, tiny_ds.base.shape[0], 10
+    quants = {
+        "full": QuantConfig(),
+        "pq": QuantConfig(kind="pq", pq_m=16, kmeans_iters=4),
+        "pq4": QuantConfig(kind="pq4", pq_m=16, kmeans_iters=4),
+        "sq": QuantConfig(kind="sq"),
+    }
+    for name, q in quants.items():
+        cfg = IndexConfig(
+            dim=base.shape[1], metric=tiny_ds.metric,
+            build=BuildConfig(M=8, knn_k=16, builder="brute",
+                              refine_iters=0, reorder="none"),
+            search=SearchConfig(L=256, k=k, early_term=False,
+                                visited_mode="bitmap"),
+            quant=q)
+        idx = KBest(cfg).add(base)
+        graph = np.asarray(idx.graph)
+        per_entries = []
+        for e in (1, 8):
+            seeds = np.asarray(idx._entry_ids(e, n)).tolist()
+            seen, dq = set(seeds), collections.deque(seeds)
+            while dq:
+                for v in graph[dq.popleft()]:
+                    if v >= 0 and int(v) not in seen:
+                        seen.add(int(v))
+                        dq.append(int(v))
+            s = dataclasses.replace(cfg.search, n_entries=e)
+            _, _, st = idx.search(tiny_ds.queries[:6], search_cfg=s,
+                                  with_stats=True)
+            expect = len(seen) + (0 if name == "full" else 4 * k)
+            np.testing.assert_array_equal(
+                np.asarray(st.n_dist), np.full(6, expect, np.int32),
+                err_msg=f"family={name} n_entries={e}")
+            per_entries.append(np.asarray(st.n_dist))
+        # exhaustive traversal covers the same reachable set regardless of
+        # seed count — only seed-EXCLUDING accounting makes these differ
+        np.testing.assert_array_equal(per_entries[0], per_entries[1])
+
+
+def test_ivf_ndist_identity_scanned_plus_rerank(tiny_ds):
+    """IVF has no entry seeds; its n_dist stays the exact identity
+    scanned codes + valid re-ranked candidates (cross-family units)."""
+    import jax.numpy as jnp
+    from repro.core import ivf as ivf_mod
+
+    cfg = IndexConfig(
+        dim=tiny_ds.base.shape[1], metric=tiny_ds.metric, index_type="ivf",
+        ivf=IVFConfig(kmeans_iters=4, list_pad=32),
+        quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=4),
+        search=SearchConfig(L=64, k=10, nprobe=4))
+    idx = KBest(cfg).add(tiny_ds.base)
+    q = idx._prep_queries(tiny_ds.queries[:6])
+    metric = "ip" if cfg.metric == "cosine" else cfg.metric
+    _, _, st = idx.search(tiny_ds.queries[:6], with_stats=True)
+    wide_L = max(64, 4 * 10)                     # _widen's queue width
+    _, cand, probes = ivf_mod.search_ivf(idx.ivf, q, 4, wide_L, metric)
+    expect = (np.asarray(ivf_mod.scanned_counts(idx.ivf, probes))
+              + np.asarray((cand >= 0).sum(axis=1)))
+    np.testing.assert_array_equal(np.asarray(st.n_dist),
+                                  expect.astype(np.int32))
 
 
 # ------------------------------------------------- bugfix 4: k > L widening

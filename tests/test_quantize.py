@@ -74,6 +74,38 @@ def test_sq_search_recall(deep_ds):
     assert recall_at_k(np.asarray(i), deep_ds.gt_ids, 10) >= 0.9
 
 
+def test_sq_kernel_impl_routes_through_kernel_and_matches(monkeypatch):
+    """sq_make_dist_fn used to IGNORE impl — dist_impl="kernel" SQ runs
+    were the ref path mislabeled under a ("sq", "kernel") cache key. The
+    kernel impl must now actually call the fused sq_gather_dist kernel and
+    agree with the ref path."""
+    import repro.kernels.ops as kops
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(200, 32)).astype(np.float32))
+    st = qz.sq_train(x)
+    codes = qz.sq_encode(st, x)
+    q = x[:4]
+    ids = jnp.asarray(rng.integers(-1, 200, size=(4, 9)).astype(np.int32))
+
+    called = {}
+    real = kops.sq_gather_dist
+
+    def spy(*a, **kw):
+        called["kernel"] = True
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "sq_gather_dist", spy)
+    for metric in ("l2", "ip"):
+        called.clear()
+        out_r = qz.sq_make_dist_fn(codes, st, metric, impl="ref")(q, ids)
+        assert "kernel" not in called
+        out_k = qz.sq_make_dist_fn(codes, st, metric, impl="kernel")(q, ids)
+        assert called.get("kernel"), "impl='kernel' must hit the kernel path"
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=3e-5, atol=3e-4)
+
+
 def test_pq_ip_tables():
     """IP LUTs: sum over subspaces == -<q, reconstruction>."""
     rng = np.random.default_rng(2)

@@ -95,6 +95,60 @@ def test_save_load_roundtrip(tmp_path, deep_index, deep_ds):
     assert np.array_equal(np.asarray(i0), np.asarray(i1))
 
 
+def test_save_same_stem_no_clobber(tmp_path, deep_ds, deep_index):
+    """save("a.graph") and save("a.ivf") used to both write their metadata
+    to "a.json" (with_suffix), so whichever saved last silently owned both
+    indexes' config. Sidecars must be per-full-name."""
+    from repro.core.index import KBest
+    from repro.core.types import (IVFConfig, IndexConfig, QuantConfig,
+                                  SearchConfig)
+    ivf = KBest(IndexConfig(
+        dim=deep_ds.base.shape[1], metric=deep_ds.metric, index_type="ivf",
+        ivf=IVFConfig(kmeans_iters=4, list_pad=32),
+        quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=4),
+        search=SearchConfig(L=64, k=10, nprobe=8))).add(deep_ds.base)
+    deep_index.save(str(tmp_path / "a.graph"))
+    ivf.save(str(tmp_path / "a.ivf"))
+    assert (tmp_path / "a.graph.json").exists()
+    assert (tmp_path / "a.ivf.json").exists()
+    assert not (tmp_path / "a.json").exists()
+    g2 = KBest.load(str(tmp_path / "a.graph"))
+    v2 = KBest.load(str(tmp_path / "a.ivf"))
+    assert g2.config.index_type == "graph" and v2.config.index_type == "ivf"
+    _, i0 = deep_index.search(deep_ds.queries[:5])
+    _, i1 = g2.search(deep_ds.queries[:5])
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_load_old_sidecar_name(tmp_path, deep_index, deep_ds):
+    """Pre-fix saves put metadata at with_suffix(".json"); load must still
+    find it when the new full-name sidecar is absent."""
+    from repro.core.index import KBest
+    p = tmp_path / "old.npz"
+    deep_index.save(str(p))
+    (p.with_name("old.npz.json")).rename(tmp_path / "old.json")
+    idx2 = KBest.load(str(p))
+    _, i0 = deep_index.search(deep_ds.queries[:5])
+    _, i1 = idx2.search(deep_ds.queries[:5])
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_config_from_dict_ignores_unknown_keys():
+    """Metadata written by newer versions (extra config fields) must load
+    on older checkouts instead of raising TypeError."""
+    from repro.core.index import _config_from_dict
+    d = {
+        "dim": 16, "metric": "l2", "index_type": "graph",
+        "build": {"M": 8, "knn_k": 16, "from_the_future": 1},
+        "search": {"L": 32, "k": 5, "hyperdrive": True},
+        "quant": {"kind": "pq4", "pq_m": 8, "warp_factor": 9},
+        "ivf": {"nlist": 4, "flux_capacitor": "on"},
+    }
+    cfg = _config_from_dict(d)
+    assert cfg.build.M == 8 and cfg.search.L == 32
+    assert cfg.quant.kind == "pq4" and cfg.ivf.nlist == 4
+
+
 def test_et_tuner_improves_hops(deep_index, deep_ds):
     from repro.core.tune import tune_early_term
     base = SearchConfig(L=64, k=10, early_term=False)
