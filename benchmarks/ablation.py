@@ -14,7 +14,7 @@ Metrics: recall, distance computations/query, hops/query, CPU QPS
 (relative), and `locality` = mean |id gap| between successively expanded
 nodes (the reorder payoff a DMA engine would see).
 
-`quant_ablation` extends the study along the A4 axis (DESIGN.md §12): the
+`quant_ablation` extends the study along the A4 axis (DESIGN.md §13): the
 same graph searched over full vectors, 8-bit PQ, 4-bit fast-scan PQ (with
 and without u8 LUT requantization) and SQ — recall vs code bytes/vector,
 the memory/recall trade the pq4 family exists for.
@@ -141,7 +141,7 @@ def quant_ablation(n: int = 2000, n_queries: int = 60,
     """The A4 axis: one graph build, every quantization family over it.
 
     Reports recall (after each family's exact re-rank), code bytes/vector
-    and dists/query — the memory/recall/compute triangle of DESIGN.md §12.
+    and dists/query — the memory/recall/compute triangle of DESIGN.md §13.
     """
     from benchmarks.qps_recall import code_bytes_per_vector
     from repro.core.types import QuantConfig

@@ -12,7 +12,7 @@ The IVF-PQ family (DESIGN.md §4) rides the same harness as a fifth variant:
 its knob is nprobe (probed clusters) instead of L, and its cost driver is
 scanned PQ codes (~m byte-reads each) instead of full-precision distances,
 so its `dists_per_query` column counts scanned codes + re-ranked exacts.
-The 4-bit fast-scan family (DESIGN.md §12) adds ivf-pq4 rows at half the
+The 4-bit fast-scan family (DESIGN.md §13) adds ivf-pq4 rows at half the
 code bytes/vector, plus an ADC microbenchmark (adc_throughput) comparing
 pq4's (m, 16) VMEM-resident-LUT scan against 8-bit PQ's (m, 256) gather —
 `--pq4-smoke` runs a tiny config of exactly that and emits BENCH_pq4.json

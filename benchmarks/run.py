@@ -8,7 +8,8 @@ Sections:
                 + the IVF-PQ family swept over nprobe
   [ablation]    paper Fig. 7 — Base -> +Index -> +EarlyTerm -> +SIMD ->
                 +Prefetch
-  [scaling]     paper §5.2 — corpus-size sweep + sharded search
+  [scaling]     paper §5.2 — corpus-size sweep + the ShardedKBest shard
+                sweep (shards x family x quant, DESIGN.md §12)
   [serving]     beyond-paper — closed/open-loop QPS through the batch-
                 serving engine (shape-bucketed compile cache, DESIGN.md §11)
   [roofline]    beyond-paper — per (arch x shape) roofline terms from the

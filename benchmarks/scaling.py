@@ -1,23 +1,35 @@
 """Scalability (paper §5.2 BigANN discussion): corpus-size sweep + the
-sharded-search path.
+sharded-index sweep (DESIGN.md §12).
 
 (a) n-sweep: hops & distance computations grow ~log n on a navigable graph
     (the property that makes graph ANNS beat IVF at scale);
-(b) sharded search on the CPU test mesh: correctness + merge overhead
-    accounting (the 256/512-chip variants are covered by the dry-run).
+(b) shard sweep: ShardedKBest over shards x {graph, ivf} x {full, pq4} on
+    the CPU mesh — recall, total dists/query (the merge's cost side), and
+    wall time per config, written to BENCH_scaling.json. "full" for the
+    IVF family means 8-bit PQ with full-queue exact re-rank (IVF has no
+    codeless mode; pq8 is its full-width baseline). Structural invariants
+    are hard-asserted the way the pq4 smoke lane asserts its byte claim:
+    1-shard results must be bit-identical to the single index, and multi-
+    shard recall must be >= the single index at equal per-shard L.
+    The physical-device lowering of the same merge (build_sharded_search's
+    shard_map path) is covered by the 256/512-chip dry-run.
+
+CLI:
+    PYTHONPATH=src python -m benchmarks.scaling                  # full
+    PYTHONPATH=src python -m benchmarks.scaling --smoke \
+        --out BENCH_scaling.json                                 # CI lane
 """
 from __future__ import annotations
 
-import dataclasses
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import build_sharded_search, make_sharded_arrays
 from repro.core.index import KBest
-from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+from repro.core.sharded import ShardedKBest
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
 from repro.data.vectors import make_dataset, recall_at_k
 
 
@@ -43,42 +55,107 @@ def corpus_sweep(sizes=(1000, 2000, 4000, 8000), quick=False):
     return rows
 
 
-def sharded_demo():
-    """Single-device mesh exercises the full shard_map + merge path."""
-    ds = make_dataset("deep_like", n=2000, n_queries=40, k=10)
-    cfg = IndexConfig(
-        dim=ds.base.shape[1], metric=ds.metric,
-        build=BuildConfig(M=24, knn_k=32, builder="brute",
-                          refine_iters=1, refine_cands=64),
-        search=SearchConfig(L=64, k=10, early_term=False, n_entries=1))
-    idx = KBest(cfg).add(ds.base)
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
-    fn = build_sharded_search(mesh, cfg.search, "ip", n_local=2000)
-    db, graph, entries, queries = make_sharded_arrays(
-        mesh, idx.db, idx.graph, jnp.array([idx.entry], jnp.int32),
-        jnp.asarray(ds.queries))
-    d, i = fn(db, graph, entries, queries)
-    # translate reorder ids
-    if idx.order is not None:
-        order = np.asarray(idx.order)
-        i = np.where(np.asarray(i) >= 0, order[np.maximum(np.asarray(i), 0)], -1)
-    rec = recall_at_k(np.asarray(i), ds.gt_ids, 10)
-    return {"shards": 1, "recall": rec}
+def _shard_cfg(family: str, quant: str, dim: int, metric: str,
+               n_shards: int) -> IndexConfig:
+    """One tuned small-corpus config per (family, quant) cell of the sweep;
+    per-shard search knobs (L, nprobe) are held constant across shard
+    counts so the sweep isolates the mesh dimension."""
+    if family == "graph":
+        q = (QuantConfig() if quant == "full"
+             else QuantConfig(kind="pq4", pq_m=8, kmeans_iters=4))
+        return IndexConfig(
+            dim=dim, metric=metric, n_shards=n_shards, quant=q,
+            build=BuildConfig(M=24, knn_k=32, builder="brute",
+                              refine_iters=1, refine_cands=64),
+            search=SearchConfig(L=64, k=10, early_term=False, n_entries=4))
+    # ivf: "full" = 8-bit PQ + full-queue exact re-rank (see module doc)
+    q = (QuantConfig(kind="pq", pq_m=16, kmeans_iters=5) if quant == "full"
+         else QuantConfig(kind="pq4", pq_m=16, kmeans_iters=5))
+    return IndexConfig(
+        dim=dim, metric=metric, index_type="ivf", n_shards=n_shards,
+        ivf=IVFConfig(nlist=0, kmeans_iters=5, list_pad=32), quant=q,
+        search=SearchConfig(L=96, k=10, nprobe=12))
 
 
-def main(quick=False):
-    print("n,recall,hops,dists_per_q")
-    rows = corpus_sweep(quick=quick)
-    for r in rows:
-        print(f"{r['n']},{r['recall']:.3f},{r['hops']:.1f},{r['dists']:.0f}")
-    # sub-linear growth check: dists grow much slower than n
-    g_d = rows[-1]["dists"] / rows[0]["dists"]
-    g_n = rows[-1]["n"] / rows[0]["n"]
-    print(f"# dists grew {g_d:.2f}x while n grew {g_n:.1f}x (sub-linear)")
-    sh = sharded_demo()
-    print(f"# sharded search (1-device mesh): recall={sh['recall']:.3f}")
+def shard_sweep(shards=(1, 2, 4), n=2000, n_queries=40, smoke=False):
+    """shards x {graph, ivf} x {full, pq4} rows + the structural asserts."""
+    if smoke:
+        shards, n, n_queries = (1, 2), 1200, 24
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=10)
+    dim, metric = ds.base.shape[1], ds.metric
+    rows = []
+    for family in ("graph", "ivf"):
+        for quant in ("full", "pq4"):
+            cfg1 = _shard_cfg(family, quant, dim, metric, 1)
+            single = KBest(cfg1).add(ds.base)
+            d0, i0, st0 = single.search(ds.queries, with_stats=True)
+            base_recall = recall_at_k(np.asarray(i0), ds.gt_ids, 10)
+            for p in shards:
+                idx = ShardedKBest(cfg1, n_shards=p).add(ds.base)
+                # untimed warmup: the first call pays the jit trace +
+                # compile (which itself grows with P as the shard loop
+                # unrolls); wall_ms must track search cost, not XLA
+                d, i, st = idx.search(ds.queries, with_stats=True)
+                np.asarray(d), np.asarray(i)
+                t0 = time.perf_counter()
+                d, i, st = idx.search(ds.queries, with_stats=True)
+                np.asarray(d), np.asarray(i)
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                rec = recall_at_k(np.asarray(i), ds.gt_ids, 10)
+                dpq = float(np.asarray(st.n_dist).mean())
+                rows.append({
+                    "family": family, "quant": quant, "shards": p,
+                    "recall": rec, "single_recall": base_recall,
+                    "dists_per_query": dpq,
+                    "wall_ms": wall_ms,
+                })
+                if p == 1:
+                    # 1-shard mesh == the single index, bit for bit
+                    assert np.array_equal(np.asarray(i), np.asarray(i0)) \
+                        and np.array_equal(np.asarray(d), np.asarray(d0)), \
+                        f"1-shard {family}/{quant} diverged from KBest"
+                else:
+                    # each shard runs the full traversal at the same L, so
+                    # the merged recall can only match or beat the single
+                    # index (DESIGN.md §12's recall argument)
+                    assert rec >= base_recall, \
+                        (f"{family}/{quant} P={p}: sharded recall {rec:.3f}"
+                         f" < single-index {base_recall:.3f}")
     return rows
 
 
+def main(quick=False, smoke=False, out=None):
+    print("n,recall,hops,dists_per_q")
+    c_rows = corpus_sweep(quick=quick or smoke)
+    for r in c_rows:
+        print(f"{r['n']},{r['recall']:.3f},{r['hops']:.1f},{r['dists']:.0f}")
+    # sub-linear growth check: dists grow much slower than n
+    g_d = c_rows[-1]["dists"] / c_rows[0]["dists"]
+    g_n = c_rows[-1]["n"] / c_rows[0]["n"]
+    print(f"# dists grew {g_d:.2f}x while n grew {g_n:.1f}x (sub-linear)")
+
+    s_rows = shard_sweep(smoke=smoke or quick)
+    print("family,quant,shards,recall,single_recall,dists_per_q,wall_ms")
+    for r in s_rows:
+        print(f"{r['family']},{r['quant']},{r['shards']},"
+              f"{r['recall']:.3f},{r['single_recall']:.3f},"
+              f"{r['dists_per_query']:.0f},{r['wall_ms']:.1f}")
+    if out:
+        report = {"corpus_sweep": c_rows, "shard_sweep": s_rows}
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {out}")
+    return {"corpus_sweep": c_rows, "shard_sweep": s_rows}
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sharded lane (CI); asserts 1-shard parity "
+                         "and multi-shard recall, writes --out JSON")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, smoke=args.smoke,
+         out=args.out or ("BENCH_scaling.json" if args.smoke else None))

@@ -4,11 +4,16 @@ evaluation dataset (paper Table 3/4), exposed like the arch configs.
     from repro.configs import kbest
     cfg = kbest.index_config("bigann_like")            # graph index
     cfg = kbest.ivf_index_config("bigann_like")        # IVF-PQ index
+    cfg = kbest.sharded_index_config("bigann_like", 4) # 4-shard graph mesh
 
 Graph presets tune the build/search pipeline of DESIGN.md §3; the IVF
 presets (DESIGN.md §4) tune (nlist auto, nprobe, pq_m) to reach
 recall@10 >= 0.90 on the 50k synthetic analogues with full-queue re-rank.
+The sharded presets (DESIGN.md §12) stamp n_shards onto the same tuned
+configs — build them with repro.core.sharded.ShardedKBest.
 """
+import dataclasses
+
 from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
                               QuantConfig, SearchConfig)
 
@@ -56,7 +61,7 @@ _IVF_CONFIGS = {
 }
 
 
-# pq4 presets (DESIGN.md §12): 4-bit codes are coarser per subspace, so the
+# pq4 presets (DESIGN.md §13): 4-bit codes are coarser per subspace, so the
 # presets spend (some of) the halved bytes on more subspaces and widen the
 # re-ranked candidate queue / probe count to hold the recall floor.
 _IVF_PQ4_CONFIGS = {
@@ -90,6 +95,34 @@ def ivf_pq4_index_config(dataset: str) -> IndexConfig:
         ivf=IVFConfig(nlist=0, kmeans_iters=10),
         quant=QuantConfig(kind="pq4", pq_m=c["pq_m"], kmeans_iters=10),
         search=SearchConfig(L=c["L"], k=10, nprobe=c["nprobe"]))
+
+
+def sharded_index_config(dataset: str, n_shards: int = 2) -> IndexConfig:
+    """Graph preset on an n_shards mesh (DESIGN.md §12). Per-shard knobs
+    are the single-shard tuning: each shard runs the full traversal at the
+    preset L, so the merged recall only goes up (scaling.py measures the
+    cost side)."""
+    return dataclasses.replace(index_config(dataset), n_shards=n_shards)
+
+
+def sharded_ivf_index_config(dataset: str, n_shards: int = 2) -> IndexConfig:
+    """IVF-PQ preset on an n_shards mesh: every shard trains its own coarse
+    centroids (nlist=0 => sqrt(n_shard)) and probes nprobe of them, so the
+    total scanned lists grow with the mesh — recall floor holds per shard."""
+    return dataclasses.replace(ivf_index_config(dataset), n_shards=n_shards)
+
+
+def sharded_ivf_pq4_index_config(dataset: str,
+                                 n_shards: int = 2) -> IndexConfig:
+    """4-bit fast-scan IVF preset on an n_shards mesh (DESIGN.md §12+§13:
+    quantized shard-local scan, shard-local exact re-rank, global merge)."""
+    return dataclasses.replace(ivf_pq4_index_config(dataset),
+                               n_shards=n_shards)
+
+
+def sharded_smoke_config(n_shards: int = 2) -> IndexConfig:
+    """Tiny sharded-graph config for CI-speed mesh tests."""
+    return dataclasses.replace(smoke_config(), n_shards=n_shards)
 
 
 def full_config(dataset: str = "bigann_like") -> IndexConfig:

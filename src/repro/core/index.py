@@ -19,6 +19,11 @@ PQ training+encoding (A4, shared codebook knobs) -> padded dense inverted
 lists. Search probes the nprobe nearest clusters, runs the fused ADC scan
 with per-list partial top-L (kernels/ivf_scan), then re-ranks exactly via
 the same gather path as the graph index.
+
+Either family scales past one device through the sharded composition
+(core/sharded.py: ShardedKBest, DESIGN.md §12): IndexConfig.n_shards > 1
+builds one single-shard KBest per contiguous row range and merges
+shard-local results; plain KBest always owns the whole corpus.
 """
 from __future__ import annotations
 
@@ -59,6 +64,9 @@ class KBest:
     # ------------------------------------------------------------------ add
     def add(self, x: np.ndarray) -> "KBest":
         cfg = self.config
+        assert cfg.n_shards == 1, \
+            "config.n_shards > 1 is the sharded composition — build it " \
+            "with repro.core.sharded.ShardedKBest, not KBest"
         b = cfg.build
         x = jnp.asarray(x, dtype=jnp.float32)
         assert x.ndim == 2 and x.shape[1] == cfg.dim, x.shape
@@ -151,32 +159,17 @@ class KBest:
         dists, ids, stats = self._search_impl(
             self._prep_queries(queries), scfg, valid_mask=vm,
             with_stats=with_stats)
-        dists = jnp.where(vm[:, None], dists, jnp.inf)
-        ids = jnp.where(vm[:, None], ids, -1)
+        dists, ids, stats = mask_padded_lanes(vm, dists, ids, stats)
         if with_stats:
-            stats = search_mod.SearchStats(
-                n_hops=jnp.where(vm, stats.n_hops, 0),
-                n_dist=jnp.where(vm, stats.n_dist, 0),
-                early_terminated=stats.early_terminated & vm,
-                iters=stats.iters)
             return dists, ids, stats
         return dists, ids
 
     def _resolve_cfg(self, k: Optional[int],
                      search_cfg: Optional[SearchConfig]) -> SearchConfig:
-        scfg = search_cfg or self.config.search
-        if k is not None and k != scfg.k:
-            # k > L would trip SearchConfig's k <= L invariant; a caller
-            # asking for more results than the queue holds means "widen the
-            # queue to fit", not "crash".
-            scfg = dataclasses.replace(scfg, k=k, L=max(scfg.L, k))
-        return scfg
+        return resolve_search_cfg(self.config, k, search_cfg)
 
     def _prep_queries(self, queries) -> jnp.ndarray:
-        q = jnp.asarray(queries, dtype=jnp.float32)
-        if self.config.metric == "cosine":
-            q = normalize(q)
-        return q
+        return prep_queries(self.config, queries)
 
     def _search_impl(self, q: jnp.ndarray, scfg: SearchConfig,
                      valid_mask: Optional[jnp.ndarray],
@@ -381,6 +374,44 @@ class KBest:
         return idx
 
 
+def resolve_search_cfg(config: IndexConfig, k: Optional[int],
+                       search_cfg: Optional[SearchConfig]) -> SearchConfig:
+    """Fold a per-call k override into a concrete SearchConfig (shared by
+    KBest, ShardedKBest and the serving engine's cache keying)."""
+    scfg = search_cfg or config.search
+    if k is not None and k != scfg.k:
+        # k > L would trip SearchConfig's k <= L invariant; a caller
+        # asking for more results than the queue holds means "widen the
+        # queue to fit", not "crash".
+        scfg = dataclasses.replace(scfg, k=k, L=max(scfg.L, k))
+    return scfg
+
+
+def prep_queries(config: IndexConfig, queries) -> jnp.ndarray:
+    """Query-side add()-time preprocessing: f32 cast + cosine normalize."""
+    q = jnp.asarray(queries, dtype=jnp.float32)
+    if config.metric == "cosine":
+        q = normalize(q)
+    return q
+
+
+def mask_padded_lanes(vm: jnp.ndarray, dists: jnp.ndarray, ids: jnp.ndarray,
+                      stats):
+    """The search_padded output contract, in one place for every facade
+    (KBest and ShardedKBest must stay bit-compatible for the serving
+    engine): invalid lanes come back as (+inf, -1) with zeroed stats.
+    `stats` may be None (with_stats=False) and passes through."""
+    dists = jnp.where(vm[:, None], dists, jnp.inf)
+    ids = jnp.where(vm[:, None], ids, -1)
+    if stats is not None:
+        stats = search_mod.SearchStats(
+            n_hops=jnp.where(vm, stats.n_hops, 0),
+            n_dist=jnp.where(vm, stats.n_dist, 0),
+            early_terminated=stats.early_terminated & vm,
+            iters=stats.iters)
+    return dists, ids, stats
+
+
 def _widen(scfg: SearchConfig) -> SearchConfig:
     """Quantized first-pass searches return their whole (wide) queue so the
     exact re-rank has at least 4k candidates to work with."""
@@ -423,6 +454,7 @@ def _config_from_dict(d: dict) -> IndexConfig:
     return IndexConfig(
         dim=d["dim"], metric=d["metric"],
         index_type=d.get("index_type", "graph"),
+        n_shards=d.get("n_shards", 1),
         build=BuildConfig(**_known_fields(BuildConfig, d["build"])),
         search=SearchConfig(**_known_fields(SearchConfig, d["search"])),
         quant=QuantConfig(**_known_fields(QuantConfig, d["quant"])),

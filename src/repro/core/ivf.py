@@ -7,7 +7,7 @@ DENSE ARRAYS — `list_ids (nlist, max_len)` int32 with -1 padding and
 probed list is one contiguous DMA and the batched ADC scan (H1's 2-D lift)
 runs without gather/scatter inside the kernel. `max_len` is padded to the
 lane-width multiple (H3 alignment analogue, IVFConfig.list_pad). With
-QuantConfig.kind="pq4" (DESIGN.md §12) the fine codes are 4-bit and
+QuantConfig.kind="pq4" (DESIGN.md §13) the fine codes are 4-bit and
 nibble-packed — `list_codes (nlist, max_len, m//2)`, half the bytes —
 and the scan dispatches to the pq4_ivf_scan kernel.
 

@@ -15,7 +15,7 @@ table reads. On TPU the LUT gather is computed either by take_along_axis
 (ref) or the pq_adc Pallas kernel via one-hot contraction on the MXU
 (DESIGN.md §2).
 
-Two PQ code widths (DESIGN.md §12):
+Two PQ code widths (DESIGN.md §13):
   kind="pq"  — 8-bit codes, K=256 centroids/sub-codebook, one byte/code.
   kind="pq4" — 4-bit fast-scan codes, K=16, TWO codes packed per byte
                (low nibble = even subspace 2j, high nibble = odd 2j+1).
@@ -149,7 +149,7 @@ def pq_make_dist_fn(codes: jnp.ndarray, m: int, impl: str = "ref"):
 
 
 # --------------------------------------------------------------------------
-# 4-bit fast-scan product quantization (DESIGN.md §12)
+# 4-bit fast-scan product quantization (DESIGN.md §13)
 # --------------------------------------------------------------------------
 def pq4_pack(codes: jnp.ndarray) -> jnp.ndarray:
     """(n, m) 4-bit codes (values < 16) -> (n, m//2) uint8, two per byte.

@@ -13,6 +13,12 @@ The greedy sweep is vectorized over all nodes simultaneously (node-lanes);
 per candidate step it needs d(c, s) for the <=M selected vectors, i.e. an
 (n, M, d) batched distance — again the paper's Q-to-B workload. All heavy
 steps are chunked over nodes to bound the gather footprint.
+
+Used by: `core/index.py: KBest.add` (graph family) — `refine_graph` is the
+pipeline stage between `core/build.py`'s kNN construction and
+`core/reorder.py`'s relabeling, driven by the `BuildConfig` knobs
+(select_rule / alpha / ssg_angle_deg / refine_iters / refine_cands /
+search_passes); the per-dataset values live in `configs/kbest.py`.
 """
 from __future__ import annotations
 

@@ -15,6 +15,13 @@ HBM rows, so the gather_dist kernel touches fewer distinct pages per step
 
 Also provides Cuthill-McKee as the baseline the paper compares against, and
 `apply_order` to physically permute vectors + graph.
+
+Used by: `core/index.py: KBest.add` (graph family) as the step after
+`core/refine.py`'s edge refinement, selected by `BuildConfig.reorder`
+("mst" | "cm" | "none"); the tuned presets in `configs/kbest.py` all pick
+"mst". The search path never sees the permutation — `KBest._search_impl`
+translates result ids back through the stored order, and `save/load`
+round-trips it. Ablated as `locality` in `benchmarks/ablation.py`.
 """
 from __future__ import annotations
 

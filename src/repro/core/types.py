@@ -82,7 +82,7 @@ class QuantConfig:
 
     kind: "none" | "pq" (8-bit, 256-centroid sub-codebooks) | "pq4" (4-bit
     fast-scan: 16-centroid sub-codebooks, two codes packed per byte, LUT
-    small enough to stay VMEM/register resident — DESIGN.md §12) | "sq"
+    small enough to stay VMEM/register resident — DESIGN.md §13) | "sq"
     (int8 per-dimension affine).
     """
 
@@ -139,11 +139,19 @@ class IVFConfig:
 
 @dataclasses.dataclass(frozen=True)
 class IndexConfig:
-    """Top-level config handed to KBest(config) (paper Table 2)."""
+    """Top-level config handed to KBest(config) (paper Table 2).
+
+    n_shards > 1 selects the sharded composition (core/sharded.py:
+    ShardedKBest — DESIGN.md §12): the corpus is split into n_shards
+    contiguous row ranges, each built as an independent single-shard index
+    of this same config, searched shard-locally and merged. Plain KBest
+    requires n_shards == 1.
+    """
 
     dim: int
     metric: str = "l2"
     index_type: str = "graph"    # INDEX_TYPES: "graph" | "ivf"
+    n_shards: int = 1            # flat mesh shape of the sharded composition
     build: BuildConfig = dataclasses.field(default_factory=BuildConfig)
     search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
@@ -152,3 +160,4 @@ class IndexConfig:
     def __post_init__(self):
         assert self.metric in METRICS, self.metric
         assert self.index_type in INDEX_TYPES, self.index_type
+        assert self.n_shards >= 1, self.n_shards

@@ -1,4 +1,4 @@
-"""pq4_scan — 4-bit fast-scan PQ ADC kernels (DESIGN.md §12).
+"""pq4_scan — 4-bit fast-scan PQ ADC kernels (DESIGN.md §13).
 
 x86 fast-scan (and its ARM port, the "ARM 4-bit PQ" line of work) shrinks
 PQ sub-codebooks to 16 centroids so the whole (m, 16) lookup table fits in

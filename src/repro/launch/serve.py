@@ -3,6 +3,11 @@
     # ANNS service over a synthetic corpus
     PYTHONPATH=src python -m repro.launch.serve --mode ann --n 4000
 
+    # same service over a sharded mesh (ShardedKBest, DESIGN.md §12):
+    # every engine serves a --shards-way sharded index through the same
+    # shape-bucketed compile cache (the cache key carries the mesh shape)
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --n 4000 --shards 2
+
     # one decode step of a smoke LM with a KV cache (the decode_32k path)
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma-2b
 """
@@ -16,26 +21,34 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def serve_ann(n: int):
+def serve_ann(n: int, shards: int = 1):
     """Graph and IVF indexes served side by side through the batch-serving
     engine (repro.serve): mixed batch sizes and mixed k drain through one
-    shape-bucketed compile cache per engine."""
+    shape-bucketed compile cache per engine. shards > 1 builds each index
+    as a ShardedKBest mesh (DESIGN.md §12) behind the same engines."""
     from repro.core.index import KBest
+    from repro.core.sharded import ShardedKBest
     from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
                                   QuantConfig, SearchConfig)
     from repro.data.vectors import make_dataset
     from repro.serve import Request, SearchEngine, serve_loop
+
+    def build(cfg, base):
+        if cfg.n_shards > 1:
+            return ShardedKBest(cfg).add(base)
+        return KBest(cfg).add(base)
+
     ds = make_dataset("deep_like", n=n, n_queries=100, k=10)
     dim = ds.base.shape[1]
-    graph = KBest(IndexConfig(
-        dim=dim, metric=ds.metric,
+    graph = build(IndexConfig(
+        dim=dim, metric=ds.metric, n_shards=shards,
         build=BuildConfig(M=32, knn_k=48, refine_iters=1, reorder="mst"),
-        search=SearchConfig(L=64, k=10, early_term=True))).add(ds.base)
-    ivf = KBest(IndexConfig(
-        dim=dim, metric=ds.metric, index_type="ivf",
+        search=SearchConfig(L=64, k=10, early_term=True)), ds.base)
+    ivf = build(IndexConfig(
+        dim=dim, metric=ds.metric, index_type="ivf", n_shards=shards,
         ivf=IVFConfig(kmeans_iters=6),
         quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=6),
-        search=SearchConfig(L=64, k=10, nprobe=8))).add(ds.base)
+        search=SearchConfig(L=64, k=10, nprobe=8)), ds.base)
 
     engines = {"graph": SearchEngine(graph, max_bucket=16, name="graph"),
                "ivf": SearchEngine(ivf, max_bucket=16, name="ivf")}
@@ -86,9 +99,11 @@ def main():
     ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="ShardedKBest mesh size for --mode ann (1 = plain)")
     args = ap.parse_args()
     if args.mode == "ann":
-        serve_ann(args.n)
+        serve_ann(args.n, shards=args.shards)
     else:
         serve_lm(args.arch)
 

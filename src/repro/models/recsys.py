@@ -320,7 +320,7 @@ def serve_retrieval(params: dict, batch: dict, cfg: RecsysConfig, k: int = 100,
     `shard_axis`; the naive path makes XLA all-gather the FULL (B, V) score
     row to run the global top-k. Instead reshape scores into (B, S, V/S)
     pinned so chunk s lives on shard s, take a LOCAL top-k per shard (the
-    exact pattern of core.distributed's sharded search merge), and only the
+    exact pattern of core.sharded's sharded search merge), and only the
     (B, S*k) candidates cross the interconnect — V/(S*k) ~ 600x less.
     """
     q = query_vector(params, batch, cfg)                     # (B, D)

@@ -18,7 +18,10 @@ than the search itself. The engine removes that cost structurally:
      to idle) but are bounded by one bucket step of slack. Valid rows are
      bit-identical to an unpadded `index.search` either way.
   3. **Compile cache.** Compiled callables are cached on
-     (bucket, SearchConfig, index_type, quant_kind). `n_traces` counts
+     (bucket, SearchConfig, index_type, quant_kind, n_shards) — the last
+     component is the mesh shape of a sharded index (`ShardedKBest` serves
+     through the same facade; its P unrolled shard searches + merge are one
+     XLA program per bucket). `n_traces` counts
      actual traces (a Python side effect at trace time), which is both the
      serving telemetry and the regression guard: serving many batch sizes
      under one bucket must trace exactly once.
@@ -88,7 +91,9 @@ class EngineStats:
 
 
 class SearchEngine:
-    """Serving facade over one built KBest index (graph or IVF)."""
+    """Serving facade over one built index — KBest (graph or IVF) or a
+    ShardedKBest mesh (anything exposing config / db / _resolve_cfg /
+    search_padded)."""
 
     def __init__(self, index: KBest, *, min_bucket: int = 8,
                  max_bucket: int = 256, name: str = "default"):
@@ -116,8 +121,11 @@ class SearchEngine:
 
     # ------------------------------------------------------------- compile
     def _cache_key(self, bucket: int, scfg: SearchConfig) -> tuple:
+        # n_shards is the flat mesh shape of a sharded index (DESIGN.md
+        # §12): a re-sharded index is a different XLA program (P unrolled
+        # shard searches + merge), so it must be a different cache entry
         cfg = self.index.config
-        return (bucket, scfg, cfg.index_type, cfg.quant.kind)
+        return (bucket, scfg, cfg.index_type, cfg.quant.kind, cfg.n_shards)
 
     def _compiled(self, bucket: int, scfg: SearchConfig):
         key = self._cache_key(bucket, scfg)

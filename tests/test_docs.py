@@ -1,0 +1,38 @@
+"""Docs-integrity checks: every `DESIGN.md §N` citation in the tree must
+resolve to a real `## §N` section header, and the numbered sections must be
+contiguous — inserting a section (e.g. §12 "Sharded search", which shifted
+quantization to §13) forces every stale citation to fail here instead of
+silently pointing at the wrong architecture note."""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CITATION = re.compile(r"DESIGN\.md §(\d+)")
+HEADER = re.compile(r"^## §(\d+)", re.M)
+# code + docs trees that cite DESIGN.md sections
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+SCAN_FILES = ("README.md", "ROADMAP.md", "CHANGES.md")
+
+
+def _sections() -> set:
+    return {int(n) for n in HEADER.findall((ROOT / "DESIGN.md").read_text())}
+
+
+def test_design_sections_contiguous():
+    secs = _sections()
+    assert secs, "DESIGN.md has no numbered sections?"
+    assert secs == set(range(1, max(secs) + 1)), \
+        f"numbered sections must be contiguous from §1: {sorted(secs)}"
+
+
+def test_design_citations_resolve():
+    secs = _sections()
+    files = [p for d in SCAN_DIRS for p in (ROOT / d).rglob("*.py")]
+    files += [ROOT / f for f in SCAN_FILES if (ROOT / f).exists()]
+    bad = []
+    for p in files:
+        for n in CITATION.findall(p.read_text()):
+            if int(n) not in secs:
+                bad.append((str(p.relative_to(ROOT)), f"§{n}"))
+    assert not bad, f"unresolvable DESIGN.md citations: {bad}"

@@ -1,4 +1,4 @@
-"""4-bit fast-scan PQ family (DESIGN.md §12): nibble packing, kernel-vs-ref
+"""4-bit fast-scan PQ family (DESIGN.md §13): nibble packing, kernel-vs-ref
 parity on graph and IVF paths, u8 LUT requantization bound, save/load, the
 half-the-bytes memory claim, and the 50k acceptance recall floor."""
 import dataclasses

@@ -1,5 +1,7 @@
-"""Sharding rules + distributed search (1-device mesh with production axis
-names; the 512-device lowering is exercised by launch/dryrun.py)."""
+"""Sharding rules + the device-mesh (shard_map) search path of
+core/sharded.py (1-device mesh with production axis names; the 512-device
+lowering is exercised by launch/dryrun.py). The device-count-agnostic
+ShardedKBest subsystem has its own suite in tests/test_sharded.py."""
 import dataclasses
 
 import jax
@@ -61,7 +63,7 @@ def test_cache_shardings_long_context():
 def test_distributed_search_parity(deep_ds, deep_index):
     """Sharded search over a 1-device mesh == exact top-k of local search
     on the same shard (the collective path is a no-op at P=1)."""
-    from repro.core.distributed import build_sharded_search, make_sharded_arrays
+    from repro.core.sharded import build_sharded_search, make_sharded_arrays
     from repro.core.types import SearchConfig
     mesh = make_test_mesh()
     n = deep_index.db.shape[0]
@@ -82,10 +84,16 @@ def test_distributed_search_parity(deep_ds, deep_index):
     assert np.array_equal(np.asarray(i_sh), np.asarray(i_loc))
 
 
-def test_distributed_search_multi_shard_recall(deep_ds):
-    """2-shard sharded search (data axis = 2) on CPU: recall must be >= the
-    single-index search at equal L (each shard runs a full traversal)."""
-    import os
-    # needs 2 devices: skipped unless the test session has them
-    if len(jax.devices()) < 2:
-        pytest.skip("single-device session")
+def test_make_sharded_arrays_uneven_rejected_then_padded(deep_index):
+    """Uneven row counts pad to the shard boundary with sentinel rows and
+    the real rows round-trip bit-exactly through placement (the P=1 mesh
+    exercises the assert path; pad_to_shard_boundary's P>1 arithmetic is
+    covered host-side in tests/test_sharded.py)."""
+    from repro.core.sharded import make_sharded_arrays
+    mesh = make_test_mesh()
+    db, graph, entries, queries = make_sharded_arrays(
+        mesh, deep_index.db, deep_index.graph,
+        jnp.array([deep_index.entry], jnp.int32),
+        jnp.zeros((4, deep_index.db.shape[1]), jnp.float32))
+    assert np.array_equal(np.asarray(db), np.asarray(deep_index.db))
+    assert np.array_equal(np.asarray(graph), np.asarray(deep_index.graph))
