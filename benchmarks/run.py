@@ -12,6 +12,8 @@ Sections:
                 sweep (shards x family x quant, DESIGN.md §12)
   [serving]     beyond-paper — closed/open-loop QPS through the batch-
                 serving engine (shape-bucketed compile cache, DESIGN.md §11)
+  [traverse]    beyond-paper — beam-width sweep of the lockstep traversal
+                (iterations / dists / recall vs W, DESIGN.md §2)
   [roofline]    beyond-paper — per (arch x shape) roofline terms from the
                 dry-run artifacts (requires launch/dryrun.py artifacts)
 
@@ -33,7 +35,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     want = (args.sections.split(",") if args.sections != "all"
             else ["qps_recall", "ablation", "scaling", "serving",
-                  "roofline"])
+                  "traverse", "roofline"])
 
     failures = []
     for name in want:
@@ -52,6 +54,13 @@ def main() -> None:
             elif name == "serving":
                 from benchmarks import serving
                 serving.main(smoke=args.quick)
+            elif name == "traverse":
+                from benchmarks import traverse
+                # BENCH_traverse.json is the git-tracked 50k baseline —
+                # quick (5k) runs must not clobber it
+                traverse.main(quick=args.quick,
+                              out=("BENCH_traverse_quick.json" if args.quick
+                                   else "BENCH_traverse.json"))
             elif name == "roofline":
                 from benchmarks import roofline
                 roofline.main()

@@ -1,0 +1,149 @@
+"""Beam-traversal micro-benchmark (DESIGN.md §2): W-sweep at fixed L.
+
+The beam's claim is structural: expanding W nodes per lockstep iteration
+cuts the `while_loop` trip count ~W× at (near-)equal recall, because the
+per-iteration fixed cost (pick, queue merge, mask bookkeeping) amortizes
+over W·M candidates and the gather pipeline has W× more rows in flight to
+hide latency behind (H2). Wall-clock on this container is interpret-mode
+CPU JAX, so the hardware-independent columns are the ones that matter:
+lockstep iterations (the trip count the beam divides) and distance
+computations per query (the work the beam must NOT inflate much).
+
+Emits BENCH_traverse.json — unlike the CI-upload-only pq4/scaling
+artifacts, the full 50k report is GIT-TRACKED as the committed perf
+baseline, so quick/smoke (5k) runs should write elsewhere (--out;
+benchmarks/run.py --quick redirects to BENCH_traverse_quick.json):
+
+    PYTHONPATH=src python -m benchmarks.traverse                 # 50k corpus
+    PYTHONPATH=src python -m benchmarks.traverse --smoke \
+        --out BENCH_traverse_smoke.json                          # CI lane
+
+The smoke lane hard-asserts the structural claims (W=4 cuts iterations
+>= 1.5x at recall within 0.005 of W=1) the way the pq4 lane asserts its
+byte claim, so CI fails loudly if a refactor quietly serializes the beam.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.index import KBest
+from repro.core.types import BuildConfig, IndexConfig, SearchConfig
+from repro.data.vectors import make_dataset, recall_at_k
+
+import dataclasses
+
+ITER_RATIO_FLOOR = 1.5    # W=4 must cut lockstep iterations by at least this
+RECALL_SLACK = 0.005      # ... at recall within this of W=1
+
+
+def run(n: int = 50_000, n_queries: int = 100, k: int = 10,
+        Ws=(1, 2, 4, 8), L: int = 64, quick: bool = False,
+        dataset: str = "deep_like") -> dict:
+    """Build one graph index, sweep beam_width at fixed L.
+
+    deep_like is the sweep corpus: it holds a ~0.99 recall floor at L=64,
+    so the W rows compare iteration counts at genuinely equal recall
+    (bigann_like's integer-rounded mixture is tie-degenerate at these
+    sizes — recall ~0.25 for ANY traversal shape — which would make the
+    equal-recall comparison meaningless).
+
+    Reports per W: recall@k, lockstep iterations (batch critical path),
+    hops & distances per query, and wall-ms per query (CPU sanity only).
+    Early termination stays ON (the per-expansion Eq. 3 semantics are part
+    of what the sweep validates); an ET-off row pair is included for the
+    pure queue-exhaustion trip count.
+    """
+    if quick:
+        n, n_queries = 5_000, 50
+    ds = make_dataset(dataset, n=n, n_queries=n_queries, k=k)
+    cfg = IndexConfig(
+        dim=ds.base.shape[1], metric=ds.metric,
+        build=BuildConfig(M=32, knn_k=48, builder="auto",
+                          refine_iters=1, refine_cands=96, reorder="mst"),
+        search=SearchConfig(L=L, k=k, early_term=True,
+                            et_patience=max(16, L // 4)))
+    t0 = time.perf_counter()
+    idx = KBest(cfg).add(ds.base)
+    build_s = time.perf_counter() - t0
+
+    rows = []
+    for et in (True, False):
+        for W in Ws:
+            s = dataclasses.replace(cfg.search, beam_width=W, early_term=et)
+            # warm with the EXACT timed call shape (full batch, with_stats):
+            # jit keys on operand shapes, so a partial-batch warmup would
+            # leave the timed window measuring a fresh trace+compile
+            idx.search(ds.queries, search_cfg=s, with_stats=True)
+            t0 = time.perf_counter()
+            d, i, st = idx.search(ds.queries, search_cfg=s, with_stats=True)
+            np.asarray(d)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "W": W, "L": L, "early_term": et,
+                "recall": recall_at_k(np.asarray(i), ds.gt_ids, k),
+                "iters": int(np.asarray(st.iters)),
+                "hops_per_query": float(np.asarray(st.n_hops).mean()),
+                "dists_per_query": float(np.asarray(st.n_dist).mean()),
+                "et_rate": float(np.asarray(st.early_terminated).mean()),
+                "wall_ms_per_query": dt * 1e3 / n_queries,
+            })
+    return {"dataset": ds.name, "n": n, "n_queries": n_queries, "k": k,
+            "L": L, "build_s": build_s, "rows": rows}
+
+
+def _by_w(report: dict, et: bool) -> dict:
+    return {r["W"]: r for r in report["rows"] if r["early_term"] is et}
+
+
+def check(report: dict) -> dict:
+    """The structural claims, computed from a report (and hard-asserted by
+    the smoke lane): iteration ratio W=1/W=4 and the recall delta."""
+    by_w = _by_w(report, True)
+    r1, r4 = by_w[1], by_w[4]
+    return {
+        "iter_ratio_w4": r1["iters"] / max(r4["iters"], 1),
+        "recall_delta_w4": r1["recall"] - r4["recall"],
+        "dist_inflation_w4": (r4["dists_per_query"]
+                              / max(r1["dists_per_query"], 1.0)),
+    }
+
+
+def main(quick: bool = False, out: str = "BENCH_traverse.json",
+         smoke: bool = False) -> dict:
+    report = run(quick=quick or smoke)
+    report["summary"] = check(report)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out} ({report['dataset']}, n={report['n']}, L={report['L']})")
+    print("W,early_term,recall,iters,hops/q,dists/q,et_rate,ms/q")
+    for r in report["rows"]:
+        print(f"{r['W']},{int(r['early_term'])},{r['recall']:.3f},"
+              f"{r['iters']},{r['hops_per_query']:.0f},"
+              f"{r['dists_per_query']:.0f},{r['et_rate']:.2f},"
+              f"{r['wall_ms_per_query']:.2f}")
+    s = report["summary"]
+    print(f"# W=4 vs W=1: iters {s['iter_ratio_w4']:.2f}x fewer, "
+          f"recall delta {s['recall_delta_w4']:+.4f}, "
+          f"dists {s['dist_inflation_w4']:.2f}x")
+    if smoke:
+        # structural guard, not a tuning target — fail CI loudly if the
+        # beam stops beating single expansion on trip count
+        assert s["iter_ratio_w4"] >= ITER_RATIO_FLOOR, s
+        # one-sided: the beam may only LOSE up to the slack (often it gains
+        # recall — the wider frontier expands a superset of nodes)
+        assert s["recall_delta_w4"] <= RECALL_SLACK, s
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus + hard-assert the beam claims")
+    ap.add_argument("--out", default="BENCH_traverse.json")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out, smoke=args.smoke)

@@ -97,6 +97,24 @@ def ivf_pq4_index_config(dataset: str) -> IndexConfig:
         search=SearchConfig(L=c["L"], k=10, nprobe=c["nprobe"]))
 
 
+# Beam presets (DESIGN.md §2): W per dataset, tuned so the beam cuts
+# lockstep iterations ~W x at equal recall on the 50k analogues
+# (benchmarks/traverse.py measures the trade; W=1 == classic best-first).
+_BEAM_W = {"glove_like": 4, "deep_like": 4, "t2i_like": 4, "bigann_like": 4}
+
+
+def beam_index_config(dataset: str, beam_width: int = 0) -> IndexConfig:
+    """Graph preset searched with beam-parallel traversal (DESIGN.md §2):
+    top-W unvisited candidates expand per lockstep iteration, feeding the
+    fused gather+distance+merge step W*M candidates at once. beam_width=0
+    takes the per-dataset tuned width; ET patience is per-expansion (Eq. 3
+    in beam order), so the preset patience needs no rescaling."""
+    cfg = index_config(dataset)
+    w = beam_width if beam_width > 0 else _BEAM_W[dataset]
+    return dataclasses.replace(
+        cfg, search=dataclasses.replace(cfg.search, beam_width=w))
+
+
 def sharded_index_config(dataset: str, n_shards: int = 2) -> IndexConfig:
     """Graph preset on an n_shards mesh (DESIGN.md §12). Per-shard knobs
     are the single-shard tuning: each shard runs the full traversal at the

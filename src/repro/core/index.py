@@ -216,18 +216,22 @@ class KBest:
             else:
                 tables = qz.pq4_query_tables(self.pq.codebooks, q, metric,
                                              lut_u8=cfg.quant.pq4_lut_u8)
+            wide = _widen(scfg)
             dist_fn = self._get_dist_fn(quant, scfg.dist_impl)
             dists, ids, stats = search_mod.search(
-                self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
-                n_total=n, valid_mask=valid_mask)
+                self.graph, tables, entry_ids, dist_fn=dist_fn, cfg=wide,
+                n_total=n, valid_mask=valid_mask,
+                expand_fn=self._get_expand_fn(quant, wide))
             dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k,
                                                cfg.quant.rerank,
                                                impl=scfg.dist_impl)
         elif quant == "sq":
+            wide = _widen(scfg)
             dist_fn = self._get_dist_fn("sq", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
-                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=_widen(scfg),
-                n_total=n, valid_mask=valid_mask)
+                self.graph, q, entry_ids, dist_fn=dist_fn, cfg=wide,
+                n_total=n, valid_mask=valid_mask,
+                expand_fn=self._get_expand_fn("sq", wide))
             dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k,
                                                cfg.quant.rerank,
                                                impl=scfg.dist_impl)
@@ -236,7 +240,8 @@ class KBest:
             dist_fn = self._get_dist_fn("full", scfg.dist_impl)
             dists, ids, stats = search_mod.search(
                 self.graph, q, entry_ids, dist_fn=dist_fn, cfg=scfg,
-                n_total=n, valid_mask=valid_mask)
+                n_total=n, valid_mask=valid_mask,
+                expand_fn=self._get_expand_fn("full", scfg))
 
         if n_exact is not None:
             # the quantized first pass counts ADC lookups in n_dist; the
@@ -283,6 +288,46 @@ class KBest:
                 fn = qz.pq4_make_dist_fn(self.pq_codes, self.pq.m, impl)
             elif kind == "sq":
                 fn = qz.sq_make_dist_fn(self.sq_codes, self.sq, metric, impl)
+            else:
+                raise ValueError(kind)
+            self._dist_fns[key] = fn
+        return self._dist_fns[key]
+
+    def _get_expand_fn(self, kind: str, scfg: SearchConfig):
+        """Fused gather+distance+sort backend for the beam traversal
+        (kernels/traverse_step.py), or None for the dist_fn + host-sort
+        path. Engaged only for kernel-impl beam searches: W=1 keeps the
+        seed gather-then-merge kernel path (the bit-parity anchor), and a
+        set batch_B means chunked dist_fn calls (core.search honors the
+        knob by falling back). Cached per (kind, L, W) — the closures are
+        jit static args, so their identity must be stable across calls."""
+        if scfg.dist_impl != "kernel" or scfg.beam_width <= 1 \
+                or scfg.batch_B != 0:
+            return None
+        L, W = scfg.L, scfg.beam_width
+        key = (kind, "expand", L, W)
+        if key not in self._dist_fns:
+            from repro.kernels import ops as kops
+            metric = "ip" if self.config.metric == "cosine" else self.config.metric
+            if kind == "full":
+                fn = search_mod.make_expand_fn(self.db, metric, L=L, n_beam=W)
+            elif kind in ("pq", "pq4"):
+                m = self.pq.m
+                K = 16 if kind == "pq4" else 256
+                codes = self.pq_codes
+                fe = kops.fused_expand_pq4 if kind == "pq4" else kops.fused_expand_pq
+
+                def fn(tables, nbr_ids, _fe=fe, _m=m, _K=K, _codes=codes):
+                    lut = tables.reshape(tables.shape[0], _m, _K)
+                    return _fe(lut, _codes, nbr_ids, L=L, n_beam=W)
+            elif kind == "sq":
+                codes, sq = self.sq_codes, self.sq
+
+                def fn(queries, nbr_ids, _codes=codes, _sq=sq):
+                    return kops.fused_expand_sq(
+                        queries, _codes, _sq.scale.reshape(1, -1),
+                        _sq.zero.reshape(1, -1), nbr_ids,
+                        metric=metric, L=L, n_beam=W)
             else:
                 raise ValueError(kind)
             self._dist_fns[key] = fn

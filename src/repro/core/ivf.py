@@ -184,6 +184,13 @@ def search_ivf(state: IVFState, q: jnp.ndarray, nprobe: int, L: int,
     Returns (approx dists (Q, L), candidate ids (Q, L), probes (Q, P)) —
     the caller re-ranks the candidates with exact distances (stage 3) and
     can derive scan-cost stats from the probe set (see scanned_counts).
+
+    Traversal-only SearchConfig knobs (`beam_width`, `batch_B`,
+    `visited_mode`) do not reach this path: the IVF scan is already a
+    dense multi-candidate expansion — every probed list is a "beam slot"
+    of max_len candidates — so results are identical for any beam_width
+    (pinned in tests/test_beam.py) and only (L, nprobe, dist_impl,
+    quant) key its behavior.
     """
     probes = select_probes(state, q, nprobe, metric)
     luts, bias = query_luts(state, q, probes, metric, lut_u8=lut_u8)

@@ -1,19 +1,37 @@
-"""Batched best-first graph traversal (paper Algorithm 1 + Eq. 3).
+"""Batched beam-parallel best-first traversal (paper Algorithm 1 + Eq. 3).
 
 Hardware adaptation (DESIGN.md §2): the paper runs one search per CPU
 thread; a TPU has no independent scalar threads, so we run a *batch* of Q
 queries in SIMD lockstep inside one `jax.lax.while_loop`, with a per-query
-`active` mask. Each iteration expands one node per active query and computes
-distances to its M neighbors in a single (Q, M, d) batched operation — the
+`active` mask. Each iteration expands the top-W unvisited candidates per
+active query (`SearchConfig.beam_width`, the beam) and computes distances to
+all W·M gathered neighbors in a single (Q, W·M) batched operation — the
 paper's 1-to-B SIMD batching (H1) lifted to 2-D (Q-to-B) so it saturates the
-MXU/VPU. Queries that satisfy the early-termination test (Eq. 3) or exhaust
-their queue are masked off and become idle lanes (measured as
-`lockstep_overhead` in the benchmarks).
+MXU/VPU, with the beam multiplying B so the gather pipeline always has W·M
+rows in flight to hide latency behind (H2). A wider beam cuts the lockstep
+trip count ~W× and amortizes per-iteration queue maintenance; W=1 is the
+classic best-first traversal and stays bit-identical to it. Queries that
+satisfy the early-termination test (Eq. 3) or exhaust their queue are masked
+off and become idle lanes (measured as `lockstep_overhead` in the
+benchmarks).
 
-The per-step neighbor batch B: the paper sizes B to the L1 cache (Eq. 1).
-On TPU the analogous constraint is VMEM tile sizing, which lives inside the
-Pallas kernels (repro/kernels); at this level B = M always, because XLA
-pipelines the whole (Q, M, d) gather+reduce.
+Queue maintenance per iteration is a sort of the W·M-entry candidate block
+(small) plus a stable merge of two sorted runs (`queue.merge_insert_beam`) —
+never a full argsort of the (L + W·M) concatenation. Early termination under
+a beam is defined per expansion in beam order: expansion w's best surviving
+candidate gets its insertion rank in the merged order, and Eq. 3's patience
+counter consumes the W ranks sequentially (w = 0 first), exactly as if the
+expansions had happened one per iteration — so W=1 semantics are the
+original ones by construction, and a beam can only reach the patience
+threshold at the same expansion count or earlier.
+
+The per-step distance batch: the paper sizes B to the L1 cache (Eq. 1). On
+TPU the analogous constraint is VMEM tile sizing inside the Pallas kernels
+(repro/kernels); `SearchConfig.batch_B` optionally chunks the W·M candidate
+axis into batch_B-sized distance calls (0 = one fused call). The
+full-precision kernel path under a beam routes through `fused_expand`
+(kernels/traverse_step.py): gather + distance + in-kernel sort emitting the
+sorted candidate block directly.
 
 Visited-set semantics: "bitmap" mode implements Algorithm 1 exactly (a
 packed per-query bitmap of distance-computed nodes, O(n/8) bytes/query);
@@ -32,8 +50,17 @@ import jax.numpy as jnp
 from repro.core import queue as qmod
 from repro.core.types import SearchConfig
 
-# dist_fn(queries (Q, d), nbr_ids (Q, M)) -> (Q, M) float32 distances.
+# dist_fn(queries (Q, d), nbr_ids (Q, B)) -> (Q, B) float32 distances.
 DistFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+# expand_fn(queries (Q, d), nbr_ids (Q, W*M)) ->
+#   (sorted_dists (Q, T), sorted_ids (Q, T), per-beam bests (Q, W),
+#    earlier-expansion tie counts (Q, W))
+# — the fused gather+distance+sort step (kernels/traverse_step.py). T is
+# min(L, W*M): only the L best new candidates can survive the merge.
+ExpandFn = Callable[[jnp.ndarray, jnp.ndarray],
+                    Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                          jnp.ndarray]]
 
 
 class SearchStats(NamedTuple):
@@ -47,7 +74,7 @@ class _Carry(NamedTuple):
     dists: jnp.ndarray    # (Q, L)
     ids: jnp.ndarray      # (Q, L)
     visited: jnp.ndarray  # (Q, L)
-    bitmap: jnp.ndarray   # (Q, W) u32 (W=1 dummy in queue mode)
+    bitmap: jnp.ndarray   # (Q, nwords) u32 (nwords=1 dummy in queue mode)
     et_ctr: jnp.ndarray   # (Q,) i32
     et_fired: jnp.ndarray  # (Q,) bool
     active: jnp.ndarray   # (Q,) bool
@@ -57,17 +84,14 @@ class _Carry(NamedTuple):
 
 
 def _dedupe_row(ids: jnp.ndarray) -> jnp.ndarray:
-    """Mask (to -1) ids duplicating an earlier position in the row."""
-    m = ids.shape[0]
-    dup = jnp.any(
-        (ids[:, None] == ids[None, :]) & (jnp.arange(m)[None, :] < jnp.arange(m)[:, None]),
-        axis=1,
-    )
-    return jnp.where(dup | (ids < 0), -1, ids)
+    """Mask (to -1) ids duplicating an earlier position in the row (the
+    shared lower-triangle helper, kept under its historical name for the
+    traversal's callers/tests)."""
+    return qmod.dedupe_ids(ids)
 
 
 def _bitmap_test(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """(W,) u32 bitmap, (M,) ids -> (M,) bool seen (invalid ids -> False)."""
+    """(nwords,) u32 bitmap, (M,) ids -> (M,) bool seen (invalid -> False)."""
     safe = jnp.maximum(ids, 0)
     words = bitmap[safe >> 5]
     bit = (words >> (safe.astype(jnp.uint32) & 31)) & 1
@@ -79,7 +103,7 @@ def _bitmap_set_raw(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     batch AND none of their bits are already set — the add only equals a
     bitwise-or while the added bits are disjoint; a duplicate id (or an
     already-set bit) carries into the adjacent bit and corrupts the visited
-    set. The traversal loop satisfies this by construction (_dedupe_row +
+    set. The traversal loop satisfies this by construction (dedupe_ids +
     _bitmap_test masking); every other caller must use _bitmap_set."""
     valid = ids >= 0
     safe = jnp.maximum(ids, 0)
@@ -93,14 +117,29 @@ def _bitmap_set(bitmap: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     batch and skips already-set bits before the scatter-add, so colliding
     entry seeds (e.g. strided seeds wrapping onto the medoid) cannot carry
     into adjacent bits."""
-    ids = _dedupe_row(ids)
+    ids = qmod.dedupe_ids(ids)
     ids = jnp.where(_bitmap_test(bitmap, ids), -1, ids)
     return _bitmap_set_raw(bitmap, ids)
 
 
+def _dist_chunked(dist_fn: DistFn, queries: jnp.ndarray, ids: jnp.ndarray,
+                  batch_B: int) -> jnp.ndarray:
+    """Distance computation over the candidate axis, optionally chunked into
+    batch_B-sized calls (SearchConfig.batch_B; 0 = one fused (Q, W·M) call).
+    Chunking never changes the candidate set or ordering (pinned by tests);
+    distance bits may drift a few ulp across chunk shapes, as any
+    hardware retiling would."""
+    C = ids.shape[1]
+    if batch_B <= 0 or batch_B >= C:
+        return dist_fn(queries, ids)
+    return jnp.concatenate(
+        [dist_fn(queries, ids[:, s:s + batch_B])
+         for s in range(0, C, batch_B)], axis=1)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "n_total", "dist_fn"),
+    static_argnames=("cfg", "n_total", "dist_fn", "expand_fn"),
 )
 def search(
     graph: jnp.ndarray,            # (n, M) i32, -1 padded
@@ -111,6 +150,7 @@ def search(
     cfg: SearchConfig,
     n_total: int,
     valid_mask: Optional[jnp.ndarray] = None,  # (Q,) bool; None => all valid
+    expand_fn: Optional[ExpandFn] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, SearchStats]:
     """Batched ANN search. Returns (dists (Q, k), ids (Q, k), stats).
 
@@ -119,11 +159,19 @@ def search(
     early-terminated queries and add no distance computations. Their rows
     still hold the (garbage) seed entries — callers mask outputs (the
     serving engine's `search_padded` does).
+
+    `expand_fn`, when given, replaces dist_fn + host-side block sort with
+    the fused gather+distance+sort kernel for the per-iteration candidate
+    block (the seed distances still go through dist_fn). It is only engaged
+    when `cfg.batch_B == 0` — a chunked distance path is a dist_fn property,
+    so batch_B falls back to dist_fn and the knob is always honored.
     """
     Q = queries.shape[0]
     L, k, M = cfg.L, cfg.k, graph.shape[1]
+    W = cfg.beam_width
     t_pos = jnp.int32(int(cfg.et_t_frac * L))
-    W = (n_total + 31) // 32 if cfg.visited_mode == "bitmap" else 1
+    nwords = (n_total + 31) // 32 if cfg.visited_mode == "bitmap" else 1
+    use_fused = expand_fn is not None and cfg.batch_B == 0
 
     # ---- init: seed the queue with the entry points -----------------------
     e_ids = jnp.broadcast_to(entry_ids[None, :], (Q, entry_ids.shape[0]))
@@ -136,7 +184,7 @@ def search(
         return out
 
     queue = jax.vmap(_seed)(qmod.Queue(q0[0], q0[1], q0[2]), e_dists, e_ids)
-    bitmap = jnp.zeros((Q, W), dtype=jnp.uint32)
+    bitmap = jnp.zeros((Q, nwords), dtype=jnp.uint32)
     if cfg.visited_mode == "bitmap":
         bitmap = jax.vmap(_bitmap_set)(bitmap, e_ids)
 
@@ -166,41 +214,68 @@ def search(
 
     def body(c: _Carry) -> _Carry:
         queue = qmod.Queue(c.dists, c.ids, c.visited)
-        idx, has = jax.vmap(qmod.pick_unvisited)(queue)
-        expand = c.active & has
-        v = jnp.where(expand, queue.ids[jnp.arange(Q), idx], -1)
-        queue = jax.vmap(qmod.mark_visited)(queue, idx, expand)
+        # the W closest unvisited candidates per lane, by the sorted
+        # invariant (first W unvisited slots in queue order)
+        idxs, has = jax.vmap(lambda qq: qmod.pick_top_w(qq, W))(queue)
+        exp_w = c.active[:, None] & has                    # (Q, W)
+        any_has = jnp.any(has, axis=1)
+        exp_any = c.active & any_has
+        v = jnp.where(exp_w, queue.ids[jnp.arange(Q)[:, None], idxs], -1)
+        queue = jax.vmap(qmod.mark_visited_many)(queue, idxs, exp_w)
 
-        # gather neighbor lists; -1 rows for inactive lanes
-        nbrs = jnp.where(v[:, None] >= 0, graph[jnp.maximum(v, 0)], -1)
-        nbrs = jax.vmap(_dedupe_row)(nbrs)
+        # gather all W neighbor lists at once; -1 rows for idle slots/lanes.
+        # The flat (W*M,) row is deduped against EARLIER flat positions, so
+        # overlap between beam expansions collapses exactly like duplicates
+        # within one adjacency row (beam order = flat order).
+        nbrs = jnp.where(v[..., None] >= 0, graph[jnp.maximum(v, 0)], -1)
+        flat = jax.vmap(qmod.dedupe_ids)(nbrs.reshape(Q, W * M))
 
         bitmap = c.bitmap
         if cfg.visited_mode == "bitmap":
-            seen = jax.vmap(_bitmap_test)(bitmap, nbrs)
-            nbrs = jnp.where(seen, -1, nbrs)
-            # nbrs are deduped (above) and seen-masked: raw scatter is safe
-            bitmap = jax.vmap(_bitmap_set_raw)(bitmap, nbrs)
+            seen = jax.vmap(_bitmap_test)(bitmap, flat)
+            flat = jnp.where(seen, -1, flat)
+            # flat ids are deduped (above) and seen-masked: raw scatter safe
+            bitmap = jax.vmap(_bitmap_set_raw)(bitmap, flat)
 
-        # --- the 1-to-B (here Q-to-B) batched distance computation (H1) ---
-        nd = dist_fn(queries, nbrs)
-        nd = jnp.where(nbrs >= 0, nd, jnp.inf)
-        n_new = jnp.sum(nbrs >= 0, axis=1).astype(jnp.int32)
+        n_new = jnp.sum(flat >= 0, axis=1).astype(jnp.int32)
 
-        merged, best_rank, _ = jax.vmap(qmod.merge_insert)(queue, nd, nbrs)
+        # candidates already in the queue are masked BEFORE the distance
+        # computation (merge_insert would discard them anyway, so results
+        # are unchanged; the fused kernel path requires it, and n_new above
+        # keeps the historical "computed distances" accounting)
+        flat = jnp.where(jax.vmap(qmod.in_queue_mask)(queue, flat), -1, flat)
+
+        # --- the 1-to-B (here Q-to-W·B) batched distance step (H1 + H2) ---
+        if use_fused:
+            sd, si, bests, ties = expand_fn(queries, flat)
+            merged = jax.vmap(qmod.merge_sorted_runs)(queue, sd, si)
+            ranks = jax.vmap(qmod.block_ranks)(queue, sd, bests, ties)
+        else:
+            nd = _dist_chunked(dist_fn, queries, flat, cfg.batch_B)
+            nd = jnp.where(flat >= 0, nd, jnp.inf)
+            # flat is fully deduped/in-queue-masked above, so the merge can
+            # skip _dedupe_new's O((WM)² + WM·L) re-derivation per step
+            merged, ranks = jax.vmap(
+                lambda qq, d, i: qmod.merge_expand(qq, d, i, W))(
+                    queue, nd, flat)
         queue = jax.tree.map(
             lambda new, old: jnp.where(
-                expand.reshape((Q,) + (1,) * (new.ndim - 1)), new, old),
+                exp_any.reshape((Q,) + (1,) * (new.ndim - 1)), new, old),
             merged, queue)
 
-        # --- early termination, Eq. 3 ---
-        beyond = best_rank > t_pos
-        et_ctr = jnp.where(expand, jnp.where(beyond, c.et_ctr + 1, 0), c.et_ctr)
-        fired = c.et_fired | (cfg.early_term & expand & (et_ctr >= cfg.et_patience))
+        # --- early termination, Eq. 3: per expansion, in beam order ---
+        beyond = ranks > t_pos                             # (Q, W)
+        et_ctr, fired = c.et_ctr, c.et_fired
+        for w in range(W):
+            ex = exp_w[:, w]
+            et_ctr = jnp.where(ex, jnp.where(beyond[:, w], et_ctr + 1, 0),
+                               et_ctr)
+            fired = fired | (cfg.early_term & ex
+                             & (et_ctr >= cfg.et_patience))
 
-        hops = c.hops + expand.astype(jnp.int32)
-        ndist = c.ndist + jnp.where(expand, n_new, 0)
-        active = c.active & has & ~fired & (hops < cfg.hops_bound)
+        hops = c.hops + jnp.sum(exp_w, axis=1).astype(jnp.int32)
+        ndist = c.ndist + jnp.where(exp_any, n_new, 0)
+        active = c.active & any_has & ~fired & (hops < cfg.hops_bound)
         return _Carry(queue.dists, queue.ids, queue.visited, bitmap,
                       et_ctr, fired, active, hops, ndist, c.it + 1)
 
@@ -229,4 +304,20 @@ def make_dist_fn(db: jnp.ndarray, metric: str, impl: str = "ref") -> DistFn:
     def fn(queries, nbr_ids):
         vecs = db[jnp.maximum(nbr_ids, 0)]
         return batched_one_to_many(queries, vecs, metric)
+    return fn
+
+
+def make_expand_fn(db: jnp.ndarray, metric: str, *, L: int,
+                   n_beam: int) -> ExpandFn:
+    """Fused gather+distance+sort backend for the beam traversal's per-
+    iteration candidate block (full-precision rows): one Pallas kernel
+    gathers the W·M neighbor rows with scalar-prefetch double-buffered DMA
+    (H2), computes distances on-chip (H1), and emits the per-query sorted
+    top-min(L, W·M) block plus per-expansion bests (the Eq. 3 operand) —
+    see kernels/traverse_step.py."""
+    from repro.kernels import ops as kops
+
+    def fn(queries, nbr_ids):
+        return kops.fused_expand(queries, db, nbr_ids, metric=metric,
+                                 L=L, n_beam=n_beam)
     return fn

@@ -21,6 +21,11 @@ benchmarks/scaling.py and asserted in tests/test_sharded.py). With P = 1
 the composition is bit-identical to plain KBest: the merge of one shard's
 sorted top-k is the identity.
 
+The SearchConfig is applied per shard verbatim — a beam_width W
+(DESIGN.md §2) means every shard's traversal expands W candidates per
+lockstep iteration, so the merged `iters` (critical path) drops ~W× across
+the whole mesh and P=1 beam results stay bit-identical to plain KBest.
+
 Stats-merge semantics (`with_stats=True`): per-shard `n_hops` and `n_dist`
 are SUMMED per query (total work across the mesh, keeping the
 dists-per-query telemetry in the same cross-family units as DESIGN.md §4);

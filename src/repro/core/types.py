@@ -60,7 +60,10 @@ class SearchConfig:
     # --- batched traversal ---
     visited_mode: str = "queue"  # "queue" (in-queue dedupe) | "bitmap" (exact)
     dist_impl: str = "ref"       # "ref" | "kernel" — distance backend
-    batch_B: int = 0             # 1-to-B batch size; 0 => M (full neighbor set)
+    beam_width: int = 1          # W: expansions per lockstep iteration (§2)
+    batch_B: int = 0             # distance-batch chunk: the W*M candidate
+                                 # axis is split into batch_B-sized dist
+                                 # calls; 0 => one (Q, W*M) call (see §2)
     n_entries: int = 8           # entry points: medoid + (n-1) strided seeds
     # --- IVF-only (ignored by the graph index, DESIGN.md §4) ---
     nprobe: int = 8              # probed clusters per query
@@ -70,6 +73,10 @@ class SearchConfig:
         assert self.visited_mode in ("queue", "bitmap")
         assert 0.0 < self.et_t_frac <= 1.0
         assert self.nprobe >= 1
+        # the beam picks W unvisited queue slots per step — more than L
+        # slots can never exist, so a wider beam is a config error
+        assert 1 <= self.beam_width <= self.L, (self.beam_width, self.L)
+        assert self.batch_B >= 0, self.batch_B
 
     @property
     def hops_bound(self) -> int:

@@ -17,6 +17,7 @@ from repro.kernels import gather_dist as _gd
 from repro.kernels import ivf_scan as _iv
 from repro.kernels import pq4_scan as _p4
 from repro.kernels import pq_adc as _pq
+from repro.kernels import traverse_step as _ts
 
 LANE = 128
 
@@ -79,6 +80,46 @@ def sq_gather_dist(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
     zp = _pad_dim(zero.reshape(1, -1), 1, LANE)
     return _gd.sq_gather_dist(qp, cp, sp, zp, ids, metric=metric,
                               interpret=_on_cpu())
+
+
+def fused_expand(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray, *,
+                 metric: str = "l2", L: int, n_beam: int = 1):
+    """Fused beam-expansion step over full vectors (DESIGN.md §2):
+    (Q, d), (n, d), (Q, C) ids -> (sorted dists (Q, T), ids (Q, T),
+    per-expansion bests (Q, n_beam)) with T = min(L, C); -1 ids -> +inf.
+    On real hardware keep T a power of two (in-kernel sort lowers via a
+    bitonic network, as with ivf_scan's top_k)."""
+    qp = _pad_dim(q, 1, LANE)
+    dbp = _pad_dim(db, 1, LANE)
+    return _ts.fused_expand(qp, dbp, ids, metric=metric, L=L,
+                            n_beam=n_beam, interpret=_on_cpu())
+
+
+def fused_expand_sq(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray, ids: jnp.ndarray, *,
+                    metric: str = "l2", L: int, n_beam: int = 1):
+    """SQ twin of fused_expand; same zero-exact padding as sq_gather_dist
+    (padded columns dequantize to 0, matching zero-padded query columns)."""
+    qp = _pad_dim(q, 1, LANE)
+    cp = _pad_dim(codes, 1, LANE)
+    sp = _pad_dim(scale.reshape(1, -1), 1, LANE)
+    zp = _pad_dim(zero.reshape(1, -1), 1, LANE)
+    return _ts.fused_expand_sq(qp, cp, sp, zp, ids, metric=metric, L=L,
+                               n_beam=n_beam, interpret=_on_cpu())
+
+
+def fused_expand_pq(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray,
+                    *, L: int, n_beam: int = 1):
+    """PQ-ADC twin of fused_expand: (Q, m, K) luts, (n, m) u8 codes."""
+    return _ts.fused_expand_pq(lut, codes, ids, L=L, n_beam=n_beam,
+                               interpret=_on_cpu())
+
+
+def fused_expand_pq4(lut: jnp.ndarray, packed: jnp.ndarray,
+                     ids: jnp.ndarray, *, L: int, n_beam: int = 1):
+    """PQ4 twin: (Q, m, 16) luts, (n, m//2) nibble-packed u8 codes."""
+    return _ts.fused_expand_pq4(lut, packed, ids, L=L, n_beam=n_beam,
+                                interpret=_on_cpu())
 
 
 def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,

@@ -65,6 +65,70 @@ def pq4_adc_ref(lut: jnp.ndarray, packed: jnp.ndarray, ids: jnp.ndarray
     return jnp.where(ids >= 0, out, jnp.inf)
 
 
+def sorted_block_ref(d: jnp.ndarray, ids: jnp.ndarray, L: int, n_beam: int):
+    """Shared epilogue of the fused_expand family: mask invalid ids to
+    +inf, stable-sort ascending (ties keep flat beam order), truncate to
+    T = min(L, C), and report each beam expansion's best (minimum) distance
+    plus its earlier-expansion exact-tie count (queue.block_ranks'
+    ties_prior operand — Eq. 3 must rank a best behind same-iteration
+    earlier-expansion entries that tie it).
+
+    d (Q, C), ids (Q, C) with C divisible by n_beam ->
+    (dists (Q, T) ascending, ids (Q, T) with -1 beyond the finite prefix,
+    bests (Q, n_beam), ties (Q, n_beam) i32).
+    """
+    Q, C = d.shape
+    T = min(L, C)
+    d = jnp.where(ids >= 0, d, jnp.inf)
+    order = jnp.argsort(d, axis=1, stable=True)
+    sd = jnp.take_along_axis(d, order, axis=1)[:, :T]
+    si = jnp.take_along_axis(ids, order, axis=1)[:, :T]
+    si = jnp.where(jnp.isfinite(sd), si, -1)
+    block = d.reshape(Q, n_beam, -1)
+    bests = jnp.min(block, axis=2)
+    eq = jnp.sum(block[:, None, :, :] == bests[:, :, None, None], axis=3)
+    tri = (jnp.arange(n_beam)[None, :] < jnp.arange(n_beam)[:, None])[None]
+    ties = jnp.sum(jnp.where(tri, eq, 0), axis=2).astype(jnp.int32)
+    return sd, si, bests, ties
+
+
+def fused_expand_ref(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray,
+                     metric: str, L: int, n_beam: int = 1):
+    """(Q, d), (n, d), (Q, C) -> sorted top-min(L, C) candidate block +
+    per-expansion bests; gather_dist then the sorted-block epilogue."""
+    return sorted_block_ref(gather_dist_ref(q, db, ids, metric), ids,
+                            L, n_beam)
+
+
+def fused_expand_sq_ref(q: jnp.ndarray, codes: jnp.ndarray,
+                        scale: jnp.ndarray, zero: jnp.ndarray,
+                        ids: jnp.ndarray, metric: str, L: int,
+                        n_beam: int = 1):
+    """SQ twin: dequantize the gathered u8 rows, then fused_expand_ref."""
+    vecs = (codes[jnp.maximum(ids, 0)].astype(jnp.float32)
+            * scale.reshape(-1)[None, None, :]
+            + zero.reshape(-1)[None, None, :])
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = vecs - qf[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+    else:
+        d = -jnp.einsum("qmd,qd->qm", vecs, qf)
+    return sorted_block_ref(d, ids, L, n_beam)
+
+
+def fused_expand_pq_ref(lut: jnp.ndarray, codes: jnp.ndarray,
+                        ids: jnp.ndarray, L: int, n_beam: int = 1):
+    """PQ-ADC twin: pq_adc_ref then the sorted-block epilogue."""
+    return sorted_block_ref(pq_adc_ref(lut, codes, ids), ids, L, n_beam)
+
+
+def fused_expand_pq4_ref(lut: jnp.ndarray, packed: jnp.ndarray,
+                         ids: jnp.ndarray, L: int, n_beam: int = 1):
+    """PQ4 twin: pq4_adc_ref then the sorted-block epilogue."""
+    return sorted_block_ref(pq4_adc_ref(lut, packed, ids), ids, L, n_beam)
+
+
 def pq4_ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
                      list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
     """pq4 twin of ivf_scan_ref: (nlist, max_len, m//2) packed list codes

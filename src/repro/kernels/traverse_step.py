@@ -1,0 +1,278 @@
+"""traverse_step — fused beam-expansion kernels (DESIGN.md §2, H1 + H2).
+
+One traversal iteration of the beam search expands W nodes per query and
+needs the distances of all W·M gathered neighbors as a SORTED candidate
+block (the queue then merges two sorted runs instead of re-sorting L+W·M
+entries). These kernels fuse the three steps that used to be separate XLA
+ops — gather, distance, block sort — into one Pallas pipeline per query:
+
+  * gather: the W·M candidate rows (full vectors, SQ codes, or PQ/PQ4 code
+    words) are DMA'd one grid step ahead by the scalar-prefetched id array —
+    the same double-buffered H2 prefetch discipline as gather_dist, now with
+    W·M rows in flight per query so the pipeline always has enough
+    outstanding DMAs to hide HBM latency behind compute;
+  * distance: computed on-chip as each row lands (H1), accumulated into a
+    VMEM scratch row — per-family math matches gather_dist / sq_gather_dist
+    / pq_adc / pq4_adc exactly;
+  * sort + reduce: on the last grid step of each query the scratch row is
+    masked (invalid ids -> +inf), stably sorted, and only the top
+    T = min(L, W·M) candidates leave the kernel (the rest can never survive
+    the queue merge), plus the per-expansion minima `bests (W,)` — the
+    operand Eq. 3's per-lane early termination consumes in beam order.
+
+Grid: (Q, C) with C = W·M. Outputs are written once per query, on step
+C−1; the (1, T) output blocks are indexed by query only, so they stay
+resident across the C steps. The in-kernel sort is jax.lax.sort
+(is_stable=True, so ties keep flat beam order — bit-compatible with the
+host-side sort_block + merge path); interpret mode executes it directly,
+Mosaic lowers it via a bitonic network — keep T a power of two there, as
+with ivf_scan's top_k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _finalize(i, idx_ref, acc_ref, od_ref, oi_ref, ob_ref, ot_ref, *,
+              T: int, W: int):
+    """Mask, sort, truncate, per-expansion minima + earlier-expansion tie
+    counts (shared epilogue; the tie counts are block_ranks' ties_prior —
+    entries of earlier beam expansions exactly tying expansion w's best
+    precede it in the stable merge, so Eq. 3's rank must include them).
+
+    `i` (the query grid index) is computed by the caller OUTSIDE the
+    pl.when region — program_id inside a cond branch has no interpret-mode
+    lowering."""
+    ids_row = idx_ref[i, :]                              # (C,)
+    d = jnp.where(ids_row >= 0, acc_ref[0, :], jnp.inf)
+    sd, si = jax.lax.sort((d, ids_row), is_stable=True, num_keys=1)
+    od_ref[...] = sd[:T].reshape(1, T)
+    oi_ref[...] = jnp.where(jnp.isfinite(sd[:T]), si[:T], -1).reshape(1, T)
+    block = d.reshape(W, -1)
+    bests = jnp.min(block, axis=1)
+    ob_ref[...] = bests.reshape(1, W)
+    eq = jnp.sum((block[None, :, :] == bests[:, None, None]), axis=2)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (W, W), 1)
+           < jax.lax.broadcasted_iota(jnp.int32, (W, W), 0))
+    ot_ref[...] = jnp.sum(jnp.where(tri, eq, 0),
+                          axis=1).astype(jnp.int32).reshape(1, W)
+
+
+def _out_shapes(Q: int, T: int, W: int):
+    return [jax.ShapeDtypeStruct((Q, T), jnp.float32),
+            jax.ShapeDtypeStruct((Q, T), jnp.int32),
+            jax.ShapeDtypeStruct((Q, W), jnp.float32),
+            jax.ShapeDtypeStruct((Q, W), jnp.int32)]
+
+
+def _out_specs(T: int, W: int):
+    return [pl.BlockSpec((1, T), lambda i, j, idx_ref: (i, 0)),
+            pl.BlockSpec((1, T), lambda i, j, idx_ref: (i, 0)),
+            pl.BlockSpec((1, W), lambda i, j, idx_ref: (i, 0)),
+            pl.BlockSpec((1, W), lambda i, j, idx_ref: (i, 0))]
+
+
+# ------------------------------------------------------------- full vectors
+def _make_full_kernel(metric: str, C: int, T: int, W: int):
+    def kernel(idx_ref, q_ref, row_ref, od_ref, oi_ref, ob_ref,
+               ot_ref, acc_ref):
+        i, j = pl.program_id(0), pl.program_id(1)
+        q = q_ref[...].astype(jnp.float32)               # (1, d)
+        r = row_ref[...].astype(jnp.float32)             # (1, d) gathered
+        if metric == "l2":
+            diff = r - q
+            acc_ref[0, j] = jnp.sum(diff * diff)
+        else:
+            acc_ref[0, j] = -jnp.sum(r * q)
+
+        @pl.when(j == C - 1)
+        def _():
+            _finalize(i, idx_ref, acc_ref, od_ref, oi_ref, ob_ref, ot_ref,
+                      T=T, W=W)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "L", "n_beam", "interpret"))
+def fused_expand(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray, *,
+                 metric: str = "l2", L: int, n_beam: int = 1,
+                 interpret: bool = False):
+    """(Q, d) queries, (n, d) db, (Q, C) ids -> sorted candidate block
+    (dists (Q, T) ascending, ids (Q, T), bests (Q, n_beam), earlier-
+    expansion tie counts (Q, n_beam)); T = min(L, C). ids < 0 are clamped
+    for the DMA and come back as (+inf, -1)."""
+    Q, d = q.shape
+    C = ids.shape[1]
+    assert ids.shape[0] == Q and C % n_beam == 0, (ids.shape, n_beam)
+    T = min(L, C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (i, 0)),
+            # the H2 prefetch gather: step (i, j)'s row is idx[i, j], DMA'd
+            # one step ahead by the pipeline engine. The prefetch operand
+            # carries the RAW ids (the epilogue masks on sign), so the DMA
+            # clamp lives in the index map.
+            pl.BlockSpec((1, d),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i, j], 0), 0)),
+        ],
+        out_specs=_out_specs(T, n_beam),
+        scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_full_kernel(metric, C, T, n_beam),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(Q, T, n_beam),
+        interpret=interpret,
+    )(ids, q, db)
+
+
+# ----------------------------------------------------------------- SQ codes
+def _make_sq_kernel(metric: str, C: int, T: int, W: int):
+    def kernel(idx_ref, q_ref, row_ref, scale_ref, zero_ref,
+               od_ref, oi_ref, ob_ref, ot_ref, acc_ref):
+        i, j = pl.program_id(0), pl.program_id(1)
+        q = q_ref[...].astype(jnp.float32)
+        r = (row_ref[...].astype(jnp.float32) * scale_ref[...]
+             + zero_ref[...])                            # in-VMEM dequant
+        if metric == "l2":
+            diff = r - q
+            acc_ref[0, j] = jnp.sum(diff * diff)
+        else:
+            acc_ref[0, j] = -jnp.sum(r * q)
+
+        @pl.when(j == C - 1)
+        def _():
+            _finalize(i, idx_ref, acc_ref, od_ref, oi_ref, ob_ref, ot_ref,
+                      T=T, W=W)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "L", "n_beam", "interpret"))
+def fused_expand_sq(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                    zero: jnp.ndarray, ids: jnp.ndarray, *,
+                    metric: str = "l2", L: int, n_beam: int = 1,
+                    interpret: bool = False):
+    """SQ twin of fused_expand: u8 rows gathered (quarter the DMA traffic of
+    f32), affine-dequantized in VMEM, same sorted-block epilogue."""
+    Q, d = q.shape
+    C = ids.shape[1]
+    assert ids.shape[0] == Q and codes.shape[1] == d
+    assert scale.shape == (1, d) and zero.shape == (1, d)
+    assert C % n_beam == 0, (C, n_beam)
+    T = min(L, C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (i, 0)),
+            pl.BlockSpec((1, d),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i, j], 0), 0)),
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j, idx_ref: (0, 0)),
+        ],
+        out_specs=_out_specs(T, n_beam),
+        scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_sq_kernel(metric, C, T, n_beam),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(Q, T, n_beam),
+        interpret=interpret,
+    )(ids, q, codes, scale, zero)
+
+
+# ----------------------------------------------------------------- PQ codes
+def _make_pq_kernel(C: int, T: int, W: int, packed: bool):
+    def kernel(idx_ref, lut_ref, code_ref, od_ref, oi_ref, ob_ref,
+               ot_ref, acc_ref):
+        i, j = pl.program_id(0), pl.program_id(1)
+        lut = lut_ref[...].astype(jnp.float32)           # (1, m, K)
+        m, K = lut.shape[1], lut.shape[2]
+        if packed:
+            p = code_ref[...].astype(jnp.int32)          # (1, m//2) bytes
+            code = jnp.stack([p & 0x0F, (p >> 4) & 0x0F],
+                             axis=-1).reshape(1, m)      # nibble unpack
+        else:
+            code = code_ref[...].astype(jnp.int32)       # (1, m)
+        # gather-as-matmul: one-hot (m, K) against the LUT (same MXU idiom
+        # as pq_adc; K=16 keeps the pq4 table VMEM/register resident)
+        onehot = (code[0, :, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (m, K), 1)
+                  ).astype(jnp.float32)
+        acc_ref[0, j] = jnp.sum(lut[0] * onehot)
+
+        @pl.when(j == C - 1)
+        def _():
+            _finalize(i, idx_ref, acc_ref, od_ref, oi_ref, ob_ref, ot_ref,
+                      T=T, W=W)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("L", "n_beam", "interpret"))
+def fused_expand_pq(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray,
+                    *, L: int, n_beam: int = 1, interpret: bool = False):
+    """PQ-ADC twin of fused_expand: (Q, m, K) luts, (n, m) u8 codes; code
+    rows stream by scalar-prefetch while the (m, K) LUT stays resident."""
+    Q, m, K = lut.shape
+    C = ids.shape[1]
+    assert ids.shape[0] == Q and C % n_beam == 0, (ids.shape, n_beam)
+    T = min(L, C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, C),
+        in_specs=[
+            pl.BlockSpec((1, m, K), lambda i, j, idx_ref: (i, 0, 0)),
+            pl.BlockSpec((1, m),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i, j], 0), 0)),
+        ],
+        out_specs=_out_specs(T, n_beam),
+        scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_pq_kernel(C, T, n_beam, packed=False),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(Q, T, n_beam),
+        interpret=interpret,
+    )(ids, lut, codes)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "n_beam", "interpret"))
+def fused_expand_pq4(lut: jnp.ndarray, packed: jnp.ndarray,
+                     ids: jnp.ndarray, *, L: int, n_beam: int = 1,
+                     interpret: bool = False):
+    """PQ4 twin: (Q, m, 16) luts, (n, m//2) nibble-packed u8 codes — half
+    the code DMA bytes of fused_expand_pq, unpacked in-kernel."""
+    Q, m, K = lut.shape
+    C = ids.shape[1]
+    assert K == 16 and packed.shape[1] * 2 == m, (lut.shape, packed.shape)
+    assert ids.shape[0] == Q and C % n_beam == 0, (ids.shape, n_beam)
+    T = min(L, C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, C),
+        in_specs=[
+            pl.BlockSpec((1, m, K), lambda i, j, idx_ref: (i, 0, 0)),
+            pl.BlockSpec((1, m // 2),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i, j], 0), 0)),
+        ],
+        out_specs=_out_specs(T, n_beam),
+        scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _make_pq_kernel(C, T, n_beam, packed=True),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(Q, T, n_beam),
+        interpret=interpret,
+    )(ids, lut, packed)

@@ -8,6 +8,11 @@
     # shape-bucketed compile cache (the cache key carries the mesh shape)
     PYTHONPATH=src python -m repro.launch.serve --mode ann --n 4000 --shards 2
 
+    # beam-parallel traversal for the graph engine (DESIGN.md §2): W
+    # expansions per lockstep iteration, same results floor, ~W x fewer
+    # iterations per batch
+    PYTHONPATH=src python -m repro.launch.serve --mode ann --beam 4
+
     # one decode step of a smoke LM with a KV cache (the decode_32k path)
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma-2b
 """
@@ -21,11 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def serve_ann(n: int, shards: int = 1):
+def serve_ann(n: int, shards: int = 1, beam: int = 1):
     """Graph and IVF indexes served side by side through the batch-serving
     engine (repro.serve): mixed batch sizes and mixed k drain through one
     shape-bucketed compile cache per engine. shards > 1 builds each index
-    as a ShardedKBest mesh (DESIGN.md §12) behind the same engines."""
+    as a ShardedKBest mesh (DESIGN.md §12) behind the same engines; beam > 1
+    searches the graph engine with beam-parallel traversal (DESIGN.md §2 —
+    the beam_width rides SearchConfig, so it is part of the cache key)."""
     from repro.core.index import KBest
     from repro.core.sharded import ShardedKBest
     from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
@@ -43,7 +50,8 @@ def serve_ann(n: int, shards: int = 1):
     graph = build(IndexConfig(
         dim=dim, metric=ds.metric, n_shards=shards,
         build=BuildConfig(M=32, knn_k=48, refine_iters=1, reorder="mst"),
-        search=SearchConfig(L=64, k=10, early_term=True)), ds.base)
+        search=SearchConfig(L=64, k=10, early_term=True,
+                            beam_width=beam)), ds.base)
     ivf = build(IndexConfig(
         dim=dim, metric=ds.metric, index_type="ivf", n_shards=shards,
         ivf=IVFConfig(kmeans_iters=6),
@@ -99,11 +107,13 @@ def main():
     ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--beam", type=int, default=1,
+                    help="graph-engine beam width W (DESIGN.md §2)")
     ap.add_argument("--shards", type=int, default=1,
                     help="ShardedKBest mesh size for --mode ann (1 = plain)")
     args = ap.parse_args()
     if args.mode == "ann":
-        serve_ann(args.n, shards=args.shards)
+        serve_ann(args.n, shards=args.shards, beam=args.beam)
     else:
         serve_lm(args.arch)
 

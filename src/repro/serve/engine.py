@@ -123,7 +123,12 @@ class SearchEngine:
     def _cache_key(self, bucket: int, scfg: SearchConfig) -> tuple:
         # n_shards is the flat mesh shape of a sharded index (DESIGN.md
         # §12): a re-sharded index is a different XLA program (P unrolled
-        # shard searches + merge), so it must be a different cache entry
+        # shard searches + merge), so it must be a different cache entry.
+        # scfg is the WHOLE frozen SearchConfig, so traversal-shape knobs —
+        # beam_width (W expansions/iteration unroll the ET scan W times,
+        # DESIGN.md §2), batch_B (chunked distance calls), visited_mode —
+        # key distinct programs by construction (tests/test_beam.py pins
+        # the beam_width case).
         cfg = self.index.config
         return (bucket, scfg, cfg.index_type, cfg.quant.kind, cfg.n_shards)
 

@@ -69,6 +69,77 @@ def test_pq_adc(q, b, n, m):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("q,c,w,n,d,L", [
+    (3, 8, 1, 60, 32, 8),     # W=1 degenerate beam
+    (5, 24, 4, 150, 96, 16),  # beam wider than the top-L block
+    (2, 6, 3, 40, 100, 16),   # L > C: block shorter than the queue
+])
+def test_fused_expand(metric, q, c, w, n, d, L):
+    qv, db = _arr(q, d), _arr(n, d)
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, c)).astype(np.int32))
+    out = ops.fused_expand(qv, db, ids, metric=metric, L=L, n_beam=w)
+    exp = ref.fused_expand_ref(qv, db, ids, metric, L, w)
+    for a, b in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-4)
+
+
+def test_fused_expand_sorted_and_masked():
+    """Output block is ascending with -1 ids beyond the finite prefix."""
+    qv, db = _arr(4, 32), _arr(50, 32)
+    ids = jnp.asarray(RNG.integers(-1, 50, size=(4, 12)).astype(np.int32))
+    sd, si, bests, ties = ops.fused_expand(qv, db, ids, metric="l2",
+                                           L=8, n_beam=2)
+    sd, si = np.asarray(sd), np.asarray(si)
+    assert np.all(sd[:, :-1] <= sd[:, 1:])
+    assert np.all((si >= 0) == np.isfinite(sd))
+    assert np.asarray(bests).shape == (4, 2)
+    # expansion 0 has no earlier expansion; random f32 dists don't tie
+    assert np.all(np.asarray(ties)[:, 0] == 0)
+    assert np.all(np.asarray(ties) >= 0)
+
+
+def test_fused_expand_pq():
+    q, b, n, m = 4, 12, 80, 8
+    lut = _arr(q, m, 256)
+    codes = jnp.asarray(RNG.integers(0, 256, size=(n, m)).astype(np.uint8))
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, b)).astype(np.int32))
+    out = ops.fused_expand_pq(lut, codes, ids, L=8, n_beam=3)
+    exp = ref.fused_expand_pq_ref(lut, codes, ids, 8, 3)
+    for a, b_ in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_expand_pq4():
+    q, b, n, m = 4, 12, 80, 8
+    lut = _arr(q, m, 16)
+    packed = jnp.asarray(RNG.integers(0, 256, size=(n, m // 2)).astype(np.uint8))
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, b)).astype(np.int32))
+    out = ops.fused_expand_pq4(lut, packed, ids, L=8, n_beam=2)
+    exp = ref.fused_expand_pq4_ref(lut, packed, ids, 8, 2)
+    for a, b_ in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_expand_sq():
+    q, b, n, d = 3, 10, 60, 48
+    qv = _arr(q, d)
+    codes = jnp.asarray(RNG.integers(0, 256, size=(n, d)).astype(np.uint8))
+    scale = jnp.asarray(np.abs(RNG.normal(size=d)).astype(np.float32) + .01)
+    zero = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, b)).astype(np.int32))
+    out = ops.fused_expand_sq(qv, codes, scale, zero, ids, metric="l2",
+                              L=8, n_beam=2)
+    exp = ref.fused_expand_sq_ref(qv, codes, scale.reshape(1, -1),
+                                  zero.reshape(1, -1), ids, "l2", 8, 2)
+    for a, b_ in zip(out, exp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=3e-5, atol=3e-3)
+
+
 def test_batch_dist_l2_nonnegative():
     qv = _arr(8, 64)
     out = np.asarray(ops.batch_dist(qv, qv, metric="l2"))
