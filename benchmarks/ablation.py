@@ -14,10 +14,12 @@ Metrics: recall, distance computations/query, hops/query, CPU QPS
 (relative), and `locality` = mean |id gap| between successively expanded
 nodes (the reorder payoff a DMA engine would see).
 
-`quant_ablation` extends the study along the A4 axis (DESIGN.md §13): the
-same graph searched over full vectors, 8-bit PQ, 4-bit fast-scan PQ (with
-and without u8 LUT requantization) and SQ — recall vs code bytes/vector,
-the memory/recall trade the pq4 family exists for.
+`quant_ablation` extends the study along the A4 axis (DESIGN.md §13/§14):
+the same graph searched over every registered quantization family
+(quantize.quant_variants — full vectors, 8-bit PQ, 4-bit fast-scan PQ with
+and without u8 LUT requantization, SQ, and the 1-bit sign codec) — recall
+vs code bytes/vector, the memory/recall trade the compressed families
+exist for.
 """
 from __future__ import annotations
 
@@ -27,6 +29,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quantize as qz
 from repro.core.index import KBest
 from repro.core.types import BuildConfig, IndexConfig, SearchConfig
 from repro.data.vectors import make_dataset, recall_at_k
@@ -127,13 +130,11 @@ def _graph_locality(idx) -> float:
     return bandwidth_stats(np.asarray(idx.graph))["mean_gap"]
 
 
-QUANT_VARIANTS = {
-    "full": dict(kind="none"),
-    "pq8": dict(kind="pq", pq_m=16),
-    "pq4": dict(kind="pq4", pq_m=16),
-    "pq4+u8lut": dict(kind="pq4", pq_m=16, pq4_lut_u8=True),
-    "sq": dict(kind="sq"),
-}
+# THE shared quant-kind registry (core/quantize.py) — a kind added there
+# (and to types.QUANT_KINDS) appears in this sweep and in core/tune.py's
+# tune_quant_kind automatically; tests assert the registry covers
+# QUANT_KINDS so the two can never drift apart again.
+QUANT_VARIANTS = qz.quant_variants(pq_m=16)
 
 
 def quant_ablation(n: int = 2000, n_queries: int = 60,

@@ -16,7 +16,11 @@ The 4-bit fast-scan family (DESIGN.md §13) adds ivf-pq4 rows at half the
 code bytes/vector, plus an ADC microbenchmark (adc_throughput) comparing
 pq4's (m, 16) VMEM-resident-LUT scan against 8-bit PQ's (m, 256) gather —
 `--pq4-smoke` runs a tiny config of exactly that and emits BENCH_pq4.json
-so CI tracks the perf trajectory.
+so CI tracks the perf trajectory. The 1-bit sign codec (DESIGN.md §14)
+adds ivf-bin rows (u32-packed XOR+popcount Hamming + exact rescore) —
+`--bin-smoke` is its CI lane (recall >= 0.85 at >= 8x byte reduction vs
+per-dimension pq8, BENCH_bin_smoke.json artifact) and `--bin-bench` the
+50k acceptance lane behind the tracked BENCH_bin.json.
 
 Wall-clock on this container is CPU-interpreted JAX, so absolute QPS is
 meaningless; the table reports (a) per-query distance computations (the
@@ -55,25 +59,29 @@ IVF_PQ_M = {"glove_like": 20, "deep_like": 16, "t2i_like": 20,
 
 
 def code_bytes_per_vector(idx: KBest) -> int:
-    """Stored code bytes per database vector (the A4 memory axis)."""
-    if idx.ivf is not None:
-        return int(idx.ivf.list_codes.shape[-1])
-    if idx.pq_codes is not None:
-        return int(idx.pq_codes.shape[-1])
-    if idx.sq_codes is not None:
-        return int(idx.sq_codes.shape[-1])
-    return 4 * int(idx.db.shape[-1])            # f32 full vectors
+    """Stored code bytes per database vector (the A4 memory axis).
+
+    Delegates to the dtype-aware accounting in core/quantize.py — bin
+    codes are uint32 WORDS, not bytes, so shape[-1] alone undercounts 4x."""
+    from repro.core import quantize as qz
+    return qz.code_bytes_per_vector(idx)
 
 
-def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32), quant_kind: str = "pq") -> list:
-    """The IVF-PQ rows: build once, sweep nprobe (the recall/cost knob).
-    quant_kind "pq" (8-bit) or "pq4" (4-bit fast-scan, half the bytes)."""
+def run_ivf(ds, k: int, nprobes=(4, 8, 16, 32), quant_kind: str = "pq",
+            pq_m: int = 0, rescore_factor: int = 8, L: int = 128) -> list:
+    """The IVF rows: build once, sweep nprobe (the recall/cost knob).
+    quant_kind "pq" (8-bit), "pq4" (4-bit fast-scan, half the bytes) or
+    "bin" (1-bit sign codec, DESIGN.md §14 — rescore_factor*k exact
+    rescore). pq_m=0 takes the per-dataset default; rescore_factor only
+    matters for bin."""
     cfg = IndexConfig(
         dim=ds.base.shape[1], metric=ds.metric, index_type="ivf",
         ivf=IVFConfig(nlist=0, kmeans_iters=8),
-        quant=QuantConfig(kind=quant_kind, pq_m=IVF_PQ_M[ds.name],
+        quant=QuantConfig(kind=quant_kind,
+                          pq_m=pq_m or IVF_PQ_M[ds.name],
                           kmeans_iters=6),
-        search=SearchConfig(L=128, k=k, nprobe=8))
+        search=SearchConfig(L=L, k=k, nprobe=8,
+                            rescore_factor=rescore_factor))
     idx = KBest(cfg).add(ds.base)
     rows = []
     for nprobe in nprobes:
@@ -152,6 +160,8 @@ def run(n: int = 4000, n_queries: int = 100, k: int = 10,
         nprobes = (4, 8, 16) if quick else (4, 8, 16, 32)
         rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq"))
         rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq4"))
+        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="bin",
+                            rescore_factor=16, L=192))
         for variant, bkw in VARIANTS.items():
             cfg = IndexConfig(
                 dim=ds.base.shape[1], metric=ds.metric,
@@ -227,6 +237,118 @@ def pq4_smoke(out: str = "BENCH_pq4.json", n: int = 2000,
     return report
 
 
+def bin_smoke(out: str = "BENCH_bin_smoke.json", n: int = 2000,
+              n_queries: int = 32) -> dict:
+    """Tiny bin lane for CI (DESIGN.md §14): IVF-bin + graph-bin rows vs an
+    equal-per-dimension-resolution pq8 comparator (pq_m=d, i.e. one 8-bit
+    code per dimension — the honest baseline for "8x smaller codes": the
+    stock pq8 preset already compresses by grouping dims). Asserts the two
+    structural claims CI tracks: best bin recall >= 0.85 and >= 8x byte
+    reduction vs that pq8. Artifact-only (upload, don't commit)."""
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=10)
+    d = ds.base.shape[1]
+    rows = run_ivf(ds, 10, nprobes=(16, 24), quant_kind="bin",
+                   rescore_factor=16, L=192)
+    # graph-bin row
+    cfg = IndexConfig(
+        dim=d, metric=ds.metric,
+        build=BuildConfig(M=24, knn_k=32, builder="brute", refine_iters=0,
+                          reorder="none"),
+        quant=QuantConfig(kind="bin"),
+        search=SearchConfig(L=192, k=10, rescore_factor=16,
+                            early_term=False))
+    gidx = KBest(cfg).add(ds.base)
+    t0 = time.perf_counter()
+    _, gi, gst = gidx.search(ds.queries, with_stats=True)
+    dt = time.perf_counter() - t0
+    bin_bytes = code_bytes_per_vector(gidx)
+    rows.append({
+        "dataset": ds.name, "variant": "graph-bin", "L": 192,
+        "recall": recall_at_k(np.asarray(gi), ds.gt_ids, 10),
+        "dists_per_query": float(np.asarray(gst.n_dist).mean()),
+        "hops_per_query": float(np.asarray(gst.n_hops).mean()),
+        "qps_cpu": ds.queries.shape[0] / dt,
+        "code_bytes": bin_bytes,
+    })
+    # pq8 comparator at pq_m=d: one 8-bit code per dimension (d bytes)
+    pq8_rows = run_ivf(ds, 10, nprobes=(16,), quant_kind="pq", pq_m=d)
+    pq8_bytes = pq8_rows[0]["code_bytes"]
+    best_bin = max(r["recall"] for r in rows)
+    assert bin_bytes * 8 <= pq8_bytes, \
+        f"bin must be >=8x smaller than per-dim pq8: {bin_bytes} vs {pq8_bytes}"
+    assert best_bin >= 0.85, f"bin smoke recall floor: {best_bin:.3f} < 0.85"
+    report = {
+        "dataset": ds.name, "n": n, "rows": rows + pq8_rows,
+        "bin_code_bytes": bin_bytes, "pq8_per_dim_code_bytes": pq8_bytes,
+        "byte_reduction_vs_pq8": pq8_bytes / bin_bytes,
+        "best_bin_recall": best_bin,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out}")
+    print(f"  code bytes/vec: bin={bin_bytes} pq8(m=d)={pq8_bytes} "
+          f"({pq8_bytes / bin_bytes:.1f}x reduction)")
+    print(f"  best bin recall@10: {best_bin:.3f}")
+    return report
+
+
+def bin_bench(out: str = "BENCH_bin.json", n: int = 50_000,
+              n_queries: int = 50) -> dict:
+    """The 50k bin acceptance lane (DESIGN.md §14): graph-bin and IVF-bin
+    preset configs on the 50k deep_like analogue, recall floor 0.90 with
+    rescore, at >= 8x smaller codes than per-dimension pq8 (d u8 codes).
+    Writes the tracked BENCH_bin.json baseline."""
+    from repro.configs import kbest as kcfg
+
+    import dataclasses
+
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=10)
+    d = ds.base.shape[1]
+    # graph-bin at 50k needs a much deeper queue than the <=10k preset
+    # (DESIGN.md §14): L=640 / rf=64 measures 0.908 vs 0.818 at the
+    # preset's L=320 / rf=32
+    gcfg = kcfg.bin_index_config("deep_like")
+    gcfg = dataclasses.replace(
+        gcfg, search=dataclasses.replace(gcfg.search, L=640,
+                                         rescore_factor=64,
+                                         early_term=False))
+    rows = []
+    for name, cfg in (("ivf-bin", kcfg.ivf_bin_index_config("deep_like")),
+                      ("graph-bin", gcfg)):
+        t0 = time.perf_counter()
+        idx = KBest(cfg).add(ds.base)
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, ids, st = idx.search(ds.queries, with_stats=True)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "dataset": ds.name, "variant": name, "n": n,
+            "L": cfg.search.L, "nprobe": cfg.search.nprobe,
+            "rescore_factor": cfg.search.rescore_factor,
+            "recall": recall_at_k(np.asarray(ids), ds.gt_ids, 10),
+            "dists_per_query": float(np.asarray(st.n_dist).mean()),
+            "qps_cpu": n_queries / dt, "build_s": build_s,
+            "code_bytes": code_bytes_per_vector(idx),
+        })
+        print(f"  {name}: recall@10={rows[-1]['recall']:.3f} "
+              f"build_s={build_s:.0f}", flush=True)
+    bin_bytes = rows[0]["code_bytes"]
+    report = {
+        "dataset": ds.name, "n": n, "rows": rows,
+        "bin_code_bytes": bin_bytes,
+        "pq8_per_dim_code_bytes": d,        # one u8 code per dimension
+        "byte_reduction_vs_pq8": d / bin_bytes,
+        "best_bin_recall": max(r["recall"] for r in rows),
+    }
+    for r in rows:
+        assert r["recall"] >= 0.90, (r["variant"], r["recall"])
+    assert bin_bytes * 8 <= d, (bin_bytes, d)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out}")
+    return report
+
+
 def main(quick=False):
     rows = run(quick=quick)
     print("dataset,variant,L,recall,dists_per_query,qps_cpu,code_bytes")
@@ -238,7 +360,7 @@ def main(quick=False):
     best = qps_at_recall(rows, 0.9)
     for ds in ALL_DATASETS:
         line = [f"{ds:12s}"]
-        for v in list(VARIANTS) + ["ivf-pq", "ivf-pq4"]:
+        for v in list(VARIANTS) + ["ivf-pq", "ivf-pq4", "ivf-bin"]:
             e = best.get((ds, v))
             line.append(f"{v}={1e3*e[0]:.2f}" if e else f"{v}=n/a")
         print("  ".join(line))
@@ -251,9 +373,18 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--pq4-smoke", action="store_true",
                     help="tiny pq4-vs-pq8 lane; writes --out JSON")
-    ap.add_argument("--out", default="BENCH_pq4.json")
+    ap.add_argument("--bin-smoke", action="store_true",
+                    help="tiny bin-vs-pq8 lane (recall>=0.85, >=8x bytes); "
+                         "writes --out JSON")
+    ap.add_argument("--bin-bench", action="store_true",
+                    help="50k bin acceptance lane; writes BENCH_bin.json")
+    ap.add_argument("--out", default="")
     args = ap.parse_args()
     if args.pq4_smoke:
-        pq4_smoke(out=args.out)
+        pq4_smoke(out=args.out or "BENCH_pq4.json")
+    elif args.bin_smoke:
+        bin_smoke(out=args.out or "BENCH_bin_smoke.json")
+    elif args.bin_bench:
+        bin_bench(out=args.out or "BENCH_bin.json")
     else:
         main(quick=args.quick)

@@ -32,7 +32,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--sections", type=str, default="all")
+    ap.add_argument("--bin-smoke", action="store_true",
+                    help="run ONLY the bin CI lane (recall >= 0.85 at "
+                         ">= 8x byte reduction vs per-dim pq8; writes "
+                         "BENCH_bin_smoke.json — artifact-only)")
     args, _ = ap.parse_known_args()
+    if args.bin_smoke:
+        from benchmarks import qps_recall
+        qps_recall.bin_smoke()
+        return
     want = (args.sections.split(",") if args.sections != "all"
             else ["qps_recall", "ablation", "scaling", "serving",
                   "traverse", "roofline"])

@@ -72,8 +72,55 @@ _IVF_PQ4_CONFIGS = {
 }
 
 
+# bin presets (DESIGN.md §14): 1-bit Hamming first pass needs a wider
+# queue and a deep exact rescore — (L, rescore_factor) on the graph side,
+# (nprobe, ivf_L, ivf_rescore_factor) on the IVF side — to hold the 0.90
+# recall floor at 32x-smaller-than-f32 codes. The IVF flat scan keeps no
+# traversal queue, so its overfetch must be much deeper than the graph's
+# (the graph's Hamming-ordered frontier already concentrates true
+# neighbours near the top): deep_like at 50k measures 0.92 at
+# nprobe=96/rf=64 but only 0.85 at nprobe=64/rf=32.
+_BIN_CONFIGS = {
+    "glove_like": dict(L=320, rescore_factor=32,
+                       nprobe=96, ivf_L=768, ivf_rescore_factor=64),
+    "deep_like": dict(L=320, rescore_factor=32,
+                      nprobe=96, ivf_L=768, ivf_rescore_factor=64),
+    "t2i_like": dict(L=320, rescore_factor=32,
+                     nprobe=96, ivf_L=768, ivf_rescore_factor=64),
+    "bigann_like": dict(L=384, rescore_factor=32,
+                        nprobe=96, ivf_L=768, ivf_rescore_factor=64),
+}
+
+
 def index_config(dataset: str) -> IndexConfig:
     return IndexConfig(**_CONFIGS[dataset])
+
+
+def bin_index_config(dataset: str) -> IndexConfig:
+    """Graph preset with the 1-bit sign codec (DESIGN.md §14): Hamming
+    traversal over u32-packed codes + exact rescore of the
+    rescore_factor*k overfetch."""
+    cfg = index_config(dataset)
+    b = _BIN_CONFIGS[dataset]
+    return dataclasses.replace(
+        cfg,
+        quant=QuantConfig(kind="bin"),
+        search=dataclasses.replace(cfg.search, L=b["L"],
+                                   rescore_factor=b["rescore_factor"]))
+
+
+def ivf_bin_index_config(dataset: str) -> IndexConfig:
+    """IVF preset with the 1-bit sign codec (DESIGN.md §14): XOR+popcount
+    list scans (no LUT stage) + exact rescore. The deep_like preset is the
+    50k acceptance config of tests/test_bin."""
+    c = _IVF_CONFIGS[dataset]
+    b = _BIN_CONFIGS[dataset]
+    return IndexConfig(
+        dim=c["dim"], metric=c["metric"], index_type="ivf",
+        ivf=IVFConfig(nlist=0, kmeans_iters=10),
+        quant=QuantConfig(kind="bin"),
+        search=SearchConfig(L=b["ivf_L"], k=10, nprobe=b["nprobe"],
+                            rescore_factor=b["ivf_rescore_factor"]))
 
 
 def ivf_index_config(dataset: str) -> IndexConfig:
@@ -136,6 +183,12 @@ def sharded_ivf_pq4_index_config(dataset: str,
     quantized shard-local scan, shard-local exact re-rank, global merge)."""
     return dataclasses.replace(ivf_pq4_index_config(dataset),
                                n_shards=n_shards)
+
+
+def sharded_bin_index_config(dataset: str, n_shards: int = 2) -> IndexConfig:
+    """1-bit sign-codec graph preset on an n_shards mesh (DESIGN.md
+    §12+§14: shard-local Hamming traversal + exact rescore, global merge)."""
+    return dataclasses.replace(bin_index_config(dataset), n_shards=n_shards)
 
 
 def sharded_smoke_config(n_shards: int = 2) -> IndexConfig:

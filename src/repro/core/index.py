@@ -58,6 +58,8 @@ class KBest:
         self.pq_codes: Optional[jnp.ndarray] = None
         self.sq: Optional[qz.SQState] = None
         self.sq_codes: Optional[jnp.ndarray] = None
+        self.bin: Optional[qz.BinState] = None
+        self.bin_codes: Optional[jnp.ndarray] = None
         self.ivf: Optional[ivf_mod.IVFState] = None
         self._dist_fns = {}
 
@@ -122,6 +124,9 @@ class KBest:
         elif q.kind == "sq":
             self.sq = qz.sq_train(x)
             self.sq_codes = qz.sq_encode(self.sq, x)
+        elif q.kind == "bin":
+            self.bin = qz.bin_train(x, q)
+            self.bin_codes = qz.bin_encode(self.bin, x)   # (n, ceil(d/32)) u32
 
     # --------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: Optional[int] = None,
@@ -183,15 +188,20 @@ class KBest:
 
         if cfg.index_type == "ivf":
             Q = q.shape[0]
-            wide = _widen(scfg)
+            wide = _widen_bin(scfg) if cfg.quant.kind == "bin" else _widen(scfg)
             _, cand, probes = ivf_mod.search_ivf(
                 self.ivf, q, scfg.nprobe, wide.L, metric,
                 impl=scfg.dist_impl,
                 lut_u8=cfg.quant.kind == "pq4" and cfg.quant.pq4_lut_u8)
             # default: re-rank the WHOLE candidate queue — the ADC scan is
             # far cheaper per candidate than graph traversal, so the exact
-            # pass (L distances/query) is where IVF recall is won back
-            rr = cfg.quant.rerank if cfg.quant.rerank > 0 else cand.shape[1]
+            # pass (L distances/query) is where IVF recall is won back.
+            # bin instead reranks its explicit rescore_factor*k overfetch
+            # (DESIGN.md §14), so recall is monotone in the factor.
+            if cfg.quant.kind == "bin" and cfg.quant.rerank == 0:
+                rr = scfg.rescore_factor * scfg.k
+            else:
+                rr = cfg.quant.rerank if cfg.quant.rerank > 0 else cand.shape[1]
             dists, ids, n_exact = self._rerank(q, cand, metric, scfg.k,
                                                rr, impl=scfg.dist_impl)
             if not with_stats:
@@ -234,6 +244,21 @@ class KBest:
                 expand_fn=self._get_expand_fn("sq", wide))
             dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k,
                                                cfg.quant.rerank,
+                                               impl=scfg.dist_impl)
+        elif quant == "bin":
+            # two-stage rescore (DESIGN.md §14): traverse under packed
+            # Hamming with the queue widened to hold rescore_factor*k
+            # candidates, then exact re-rank that overfetch
+            qcodes = qz.bin_query_codes(self.bin, q)
+            wide = _widen_bin(scfg)
+            dist_fn = self._get_dist_fn("bin", scfg.dist_impl)
+            dists, ids, stats = search_mod.search(
+                self.graph, qcodes, entry_ids, dist_fn=dist_fn, cfg=wide,
+                n_total=n, valid_mask=valid_mask,
+                expand_fn=self._get_expand_fn("bin", wide))
+            rr = cfg.quant.rerank if cfg.quant.rerank > 0 \
+                else scfg.rescore_factor * scfg.k
+            dists, ids, n_exact = self._rerank(q, ids, metric, scfg.k, rr,
                                                impl=scfg.dist_impl)
         else:
             n_exact = None
@@ -288,6 +313,8 @@ class KBest:
                 fn = qz.pq4_make_dist_fn(self.pq_codes, self.pq.m, impl)
             elif kind == "sq":
                 fn = qz.sq_make_dist_fn(self.sq_codes, self.sq, metric, impl)
+            elif kind == "bin":
+                fn = qz.bin_make_dist_fn(self.bin_codes, impl)
             else:
                 raise ValueError(kind)
             self._dist_fns[key] = fn
@@ -328,6 +355,12 @@ class KBest:
                         queries, _codes, _sq.scale.reshape(1, -1),
                         _sq.zero.reshape(1, -1), nbr_ids,
                         metric=metric, L=L, n_beam=W)
+            elif kind == "bin":
+                codes = self.bin_codes
+
+                def fn(qcodes, nbr_ids, _codes=codes):
+                    return kops.fused_expand_bin(qcodes, _codes, nbr_ids,
+                                                 L=L, n_beam=W)
             else:
                 raise ValueError(kind)
             self._dist_fns[key] = fn
@@ -365,7 +398,10 @@ class KBest:
             arrs["ivf_centroids"] = np.asarray(self.ivf.centroids)
             arrs["ivf_list_ids"] = np.asarray(self.ivf.list_ids)
             arrs["ivf_list_codes"] = np.asarray(self.ivf.list_codes)
-            arrs["ivf_codebooks"] = np.asarray(self.ivf.pq.codebooks)
+            if self.ivf.pq is not None:
+                arrs["ivf_codebooks"] = np.asarray(self.ivf.pq.codebooks)
+            if self.ivf.bin is not None:
+                arrs["ivf_bin_rot"] = np.asarray(self.ivf.bin.rot)
         if self.order is not None:
             arrs["order"] = np.asarray(self.order)
         if self.pq is not None:
@@ -375,6 +411,9 @@ class KBest:
             arrs["sq_scale"] = np.asarray(self.sq.scale)
             arrs["sq_zero"] = np.asarray(self.sq.zero)
             arrs["sq_codes"] = np.asarray(self.sq_codes)
+        if self.bin is not None:
+            arrs["bin_rot"] = np.asarray(self.bin.rot)
+            arrs["bin_codes"] = np.asarray(self.bin_codes)
         np.savez_compressed(p, **arrs)
         meta = {"entry": self.entry,
                 "config": _config_to_dict(self.config)}
@@ -397,14 +436,21 @@ class KBest:
             if "graph" in z:
                 idx.graph = jnp.asarray(z["graph"])
             if "ivf_centroids" in z:
-                books = jnp.asarray(z["ivf_codebooks"])
+                pq_state = None
+                if "ivf_codebooks" in z:
+                    books = jnp.asarray(z["ivf_codebooks"])
+                    pq_state = qz.PQState(books, books.shape[0],
+                                          books.shape[2])
+                bin_state = qz.BinState(jnp.asarray(z["ivf_bin_rot"])) \
+                    if "ivf_bin_rot" in z else None
                 idx.ivf = ivf_mod.IVFState(
                     centroids=jnp.asarray(z["ivf_centroids"]),
                     list_ids=jnp.asarray(z["ivf_list_ids"]),
                     list_codes=jnp.asarray(z["ivf_list_codes"]),
-                    pq=qz.PQState(books, books.shape[0], books.shape[2]),
+                    pq=pq_state,
                     residual=cfg.ivf.residual,
-                    packed=cfg.quant.kind == "pq4")
+                    packed=cfg.quant.kind == "pq4",
+                    bin=bin_state)
             if "pq_codebooks" in z:
                 books = jnp.asarray(z["pq_codebooks"])
                 idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
@@ -413,6 +459,9 @@ class KBest:
                 idx.sq = qz.SQState(jnp.asarray(z["sq_scale"]),
                                     jnp.asarray(z["sq_zero"]))
                 idx.sq_codes = jnp.asarray(z["sq_codes"])
+            if "bin_rot" in z:
+                idx.bin = qz.BinState(jnp.asarray(z["bin_rot"]))
+                idx.bin_codes = jnp.asarray(z["bin_codes"])
             if "order" in z:
                 idx.order = np.asarray(z["order"])
         idx.entry = int(meta["entry"])
@@ -461,6 +510,17 @@ def _widen(scfg: SearchConfig) -> SearchConfig:
     """Quantized first-pass searches return their whole (wide) queue so the
     exact re-rank has at least 4k candidates to work with."""
     want = max(scfg.L, 4 * scfg.k)
+    return dataclasses.replace(scfg, L=want, k=want)
+
+
+def _widen_bin(scfg: SearchConfig) -> SearchConfig:
+    """bin first pass (DESIGN.md §14): the Hamming queue must hold the
+    rescore_factor*k overfetch the exact rescore picks from. L stays at
+    max(L, rescore_factor*k): while rescore_factor*k <= L the traversal is
+    IDENTICAL across factors and a deeper factor just rescores a longer
+    prefix of the same Hamming ranking, so recall is deterministically
+    non-decreasing in rescore_factor; past L/k the queue itself widens."""
+    want = max(scfg.L, scfg.rescore_factor * scfg.k)
     return dataclasses.replace(scfg, L=want, k=want)
 
 

@@ -9,7 +9,10 @@ runs without gather/scatter inside the kernel. `max_len` is padded to the
 lane-width multiple (H3 alignment analogue, IVFConfig.list_pad). With
 QuantConfig.kind="pq4" (DESIGN.md §13) the fine codes are 4-bit and
 nibble-packed — `list_codes (nlist, max_len, m//2)`, half the bytes —
-and the scan dispatches to the pq4_ivf_scan kernel.
+and the scan dispatches to the pq4_ivf_scan kernel. With kind="bin"
+(DESIGN.md §14) the lists hold u32-packed sign codes —
+`list_codes (nlist, max_len, ceil(d/32))` — and the scan is XOR+popcount
+Hamming (bin_ivf_scan) with no LUT stage at all.
 
 Search pipeline (mirrors the three-stage ScaNN/KScaNN shape):
   1. coarse probe: exact query-to-centroid distances, top-nprobe clusters
@@ -49,10 +52,14 @@ class IVFState:
     centroids: jnp.ndarray    # (nlist, d) f32 coarse codebook
     list_ids: jnp.ndarray     # (nlist, max_len) i32, -1 padded
     list_codes: jnp.ndarray   # (nlist, max_len, m) u8 residual PQ codes,
-                              # or (nlist, max_len, m//2) nibble-packed pq4
-    pq: qz.PQState            # fine codebooks (m, K, ds); K=256 pq / 16 pq4
+                              # (nlist, max_len, m//2) nibble-packed pq4,
+                              # or (nlist, max_len, ceil(d/32)) u32 bin
+    pq: Optional[qz.PQState]  # fine codebooks (m, K, ds); K=256 pq / 16
+                              # pq4; None for the bin codec
     residual: bool
     packed: bool = False      # True => pq4 nibble-packed list_codes
+    bin: Optional[qz.BinState] = None  # set => 1-bit sign codec lists
+                                       # (DESIGN.md §14)
 
     @property
     def nlist(self) -> int:
@@ -83,12 +90,22 @@ def build_ivf(x: jnp.ndarray, ivf_cfg: IVFConfig, quant_cfg: QuantConfig
     cents = qz.kmeans(x, nlist, ivf_cfg.kmeans_iters, seed=ivf_cfg.seed)
     assign = jnp.argmin(pairwise(x, cents, "l2"), axis=1)
 
-    vecs = x - cents[assign] if ivf_cfg.residual else x
-    pq = qz.pq_train(vecs, quant_cfg)
-    packed = quant_cfg.kind == "pq4"
-    codes = qz.pq_encode(pq.codebooks, vecs)            # (n, m), values < K
-    if packed:
-        codes = qz.pq4_pack(codes)                      # (n, m//2)
+    if quant_cfg.kind == "bin":
+        # 1-bit codec (DESIGN.md §14): signs of the ROTATED RAW vectors,
+        # not residuals — Hamming between raw-sign codes is the quantity
+        # the rescore bound speaks to, and a shared rotation means one
+        # query encoding serves every probed list (no per-probe LUTs)
+        pq, packed = None, False
+        bin_state = qz.bin_train(x, quant_cfg)
+        codes = qz.bin_encode(bin_state, x)             # (n, nw) u32
+    else:
+        bin_state = None
+        vecs = x - cents[assign] if ivf_cfg.residual else x
+        pq = qz.pq_train(vecs, quant_cfg)
+        packed = quant_cfg.kind == "pq4"
+        codes = qz.pq_encode(pq.codebooks, vecs)        # (n, m), values < K
+        if packed:
+            codes = qz.pq4_pack(codes)                  # (n, m//2)
 
     # host-side list layout: bucket ids by cluster, pad to a common max_len
     # (vectorized: stable sort by cluster, then scatter each point to its
@@ -102,13 +119,15 @@ def build_ivf(x: jnp.ndarray, ivf_cfg: IVFConfig, quant_cfg: QuantConfig
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
     slot = np.arange(n) - starts[assign_h[order]]       # rank within cluster
     list_ids = np.full((nlist, max_len), -1, np.int32)
-    list_codes = np.zeros((nlist, max_len, codes_h.shape[1]), np.uint8)
+    # dtype follows the codes (u8 for pq/pq4/sq, u32 words for bin)
+    list_codes = np.zeros((nlist, max_len, codes_h.shape[1]), codes_h.dtype)
     list_ids[assign_h[order], slot] = order.astype(np.int32)
     list_codes[assign_h[order], slot] = codes_h[order]
 
     return IVFState(centroids=cents, list_ids=jnp.asarray(list_ids),
                     list_codes=jnp.asarray(list_codes), pq=pq,
-                    residual=ivf_cfg.residual, packed=packed)
+                    residual=ivf_cfg.residual, packed=packed,
+                    bin=bin_state)
 
 
 # --------------------------------------------------------------------- search
@@ -176,6 +195,30 @@ def scan_lists(state: IVFState, luts: jnp.ndarray, probes: jnp.ndarray,
     return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
 
 
+def scan_bin_lists(state: IVFState, qcodes: jnp.ndarray,
+                   probes: jnp.ndarray, L: int, impl: str = "ref"
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """bin twin of scan_lists: XOR+popcount Hamming over the probed packed
+    lists, per-list partial top-L, then the same global top-L merge.
+    Returns (dists (Q, L) ascending Hamming, ids (Q, L), -1 pad)."""
+    Lp = min(L, state.max_len)
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+        pd, pi = kops.bin_ivf_scan(qcodes, state.list_codes, state.list_ids,
+                                   probes, L=Lp)
+    else:
+        from repro.kernels.ref import bin_ivf_scan_ref
+        pd, pi = bin_ivf_scan_ref(qcodes, state.list_codes, state.list_ids,
+                                  probes, Lp)
+    Q = probes.shape[0]
+    flat_d = pd.reshape(Q, -1)                          # (Q, P*Lp)
+    flat_i = pi.reshape(Q, -1)
+    k = min(L, flat_d.shape[1])
+    neg, pos = jax.lax.top_k(-flat_d, k)
+    ids = jnp.take_along_axis(flat_i, pos, axis=1)
+    return -neg, jnp.where(jnp.isfinite(neg), ids, -1)
+
+
 def search_ivf(state: IVFState, q: jnp.ndarray, nprobe: int, L: int,
                metric: str, impl: str = "ref", lut_u8: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -193,6 +236,12 @@ def search_ivf(state: IVFState, q: jnp.ndarray, nprobe: int, L: int,
     quant) key its behavior.
     """
     probes = select_probes(state, q, nprobe, metric)
+    if state.bin is not None:
+        # bin codec: one packed query encoding serves every probed list
+        # (no per-probe LUT machinery — DESIGN.md §14)
+        qcodes = qz.bin_query_codes(state.bin, q)
+        dists, ids = scan_bin_lists(state, qcodes, probes, L, impl)
+        return dists, ids, probes
     luts, bias = query_luts(state, q, probes, metric, lut_u8=lut_u8)
     dists, ids = scan_lists(state, luts, probes, L, impl, bias=bias)
     return dists, ids, probes

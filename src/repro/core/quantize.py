@@ -24,6 +24,15 @@ Two PQ code widths (DESIGN.md §13):
                requantized to u8 per query (pq4_requant_lut) as in x86
                fast-scan, trading a bounded distance error (<= m*step/2)
                for byte-wide table arithmetic.
+
+One extreme-compression codec (DESIGN.md §14):
+  kind="bin" — 1 bit/dimension: a seeded random orthonormal rotation
+               (QR of a Gaussian) followed by sign quantization, packed
+               into ceil(d/32) uint32 words per vector. The first-pass
+               distance is Hamming (XOR + popcount) between packed query
+               and database codes; the RaBitQ-style estimator error is
+               absorbed by overfetching SearchConfig.rescore_factor * k
+               candidates and re-ranking them exactly.
 """
 from __future__ import annotations
 
@@ -35,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.types import QuantConfig
+from repro.core.types import QUANT_KINDS, QuantConfig
 
 
 # --------------------------------------------------------------------------
@@ -280,3 +289,125 @@ def sq_make_dist_fn(codes: jnp.ndarray, state: SQState, metric: str,
         vecs = c * state.scale[None, None, :] + state.zero[None, None, :]
         return batched_one_to_many(queries, vecs, metric)
     return fn
+
+
+# --------------------------------------------------------------------------
+# 1-bit binary quantization (random-rotation sign codec, DESIGN.md §14)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class BinState:
+    rot: jnp.ndarray    # (d, d) f32 orthonormal rotation (QR of a Gaussian)
+
+    @property
+    def dim(self) -> int:
+        return self.rot.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return -(-self.dim // 32)
+
+
+def _random_rotation(d: int, seed: int) -> jnp.ndarray:
+    """Orthonormal (d, d) rotation: QR of a seeded Gaussian, with the R
+    diagonal sign-fixed so the factorization (and thus every code) is a
+    deterministic function of the seed."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (d, d), jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    s = jnp.sign(jnp.diagonal(r))
+    return q * jnp.where(s == 0, 1.0, s)[None, :]
+
+
+def pack_signs(bits: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) sign bits ({0,1}, any int/bool dtype) -> (n, ceil(d/32))
+    uint32. Bit b of word w holds dimension 32*w + b; tail dimensions of
+    the last word (d not a multiple of 32) are zero on BOTH query and
+    database codes, so they XOR to 0 and never contribute to Hamming."""
+    n, d = bits.shape
+    nw = -(-d // 32)
+    b = bits.astype(jnp.uint32)
+    if nw * 32 != d:
+        b = jnp.pad(b, ((0, 0), (0, nw * 32 - d)))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    # disjoint bit positions: the uint32 sum is carry-free, i.e. an OR
+    return jnp.sum(b.reshape(n, nw, 32) << shifts[None, None, :],
+                   axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(packed: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(n, ceil(d/32)) uint32 -> (n, d) uint8 sign bits (pack_signs inverse)."""
+    n, nw = packed.shape
+    assert nw * 32 >= d, (nw, d)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(n, nw * 32)[:, :d].astype(jnp.uint8)
+
+
+def bin_train(db: jnp.ndarray, cfg: QuantConfig) -> BinState:
+    """"Training" is just drawing the rotation — data-independent, so the
+    codec never needs retraining as the corpus changes."""
+    return BinState(rot=_random_rotation(db.shape[1], cfg.seed))
+
+
+@jax.jit
+def _bin_encode(rot: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return pack_signs((x @ rot >= 0).astype(jnp.uint32))
+
+
+def bin_encode(state: BinState, db: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) f32 -> (n, ceil(d/32)) uint32 packed sign codes."""
+    return _bin_encode(state.rot, db)
+
+
+def bin_query_codes(state: BinState, queries: jnp.ndarray) -> jnp.ndarray:
+    """Query-side operand passed to search() as the "queries" array: the
+    SAME rotation+sign+pack as the database side (symmetric Hamming)."""
+    return _bin_encode(state.rot, queries)
+
+
+def bin_make_dist_fn(codes: jnp.ndarray, impl: str = "ref"):
+    """DistFn over packed bin codes; `qcodes` (the search "queries") is
+    (Q, nw) uint32. Distances are exact integer Hamming counts in f32."""
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def fn(qcodes, nbr_ids):
+            return kops.bin_dist(qcodes, codes, nbr_ids)
+        return fn
+
+    from repro.kernels.ref import bin_dist_ref
+
+    def fn(qcodes, nbr_ids):
+        return bin_dist_ref(qcodes, codes, nbr_ids)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Quant-kind registry (sweeps) and the code-size accounting they report
+# --------------------------------------------------------------------------
+def quant_variants(pq_m: int = 16) -> dict:
+    """Named QuantConfig kwargs for every quantization variant — THE list
+    sweeps enumerate (core/tune.py, benchmarks/ablation.py), so a new kind
+    added here (and to types.QUANT_KINDS, which tests assert this registry
+    covers) appears in every sweep automatically. pq_m must divide the
+    dataset dim; "bin" and "sq" ignore it."""
+    return {
+        "full": dict(kind="none"),
+        "pq8": dict(kind="pq", pq_m=pq_m),
+        "pq4": dict(kind="pq4", pq_m=pq_m),
+        "pq4+u8lut": dict(kind="pq4", pq_m=pq_m, pq4_lut_u8=True),
+        "sq": dict(kind="sq"),
+        "bin": dict(kind="bin"),
+    }
+
+
+def code_bytes_per_vector(idx) -> int:
+    """Stored code bytes per database vector (the A4 memory axis), dtype-
+    aware: pq/pq4/sq codes are uint8 (1 byte/element) but bin codes are
+    uint32 words (4 bytes/element). Takes a KBest (duck-typed)."""
+    for arr in (getattr(idx, "ivf", None) and idx.ivf.list_codes,
+                getattr(idx, "bin_codes", None),
+                getattr(idx, "pq_codes", None),
+                getattr(idx, "sq_codes", None)):
+        if arr is not None:
+            return int(arr.shape[-1]) * arr.dtype.itemsize
+    return 4 * int(idx.db.shape[-1])            # f32 full vectors

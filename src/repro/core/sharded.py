@@ -10,9 +10,10 @@ of vectors) is shard-per-device + merge:
     centroids + inverted lists (IVF family), and its own PQ/SQ codebooks —
     so no cross-shard edges or lists exist;
   * a query runs the full shard-local pipeline on every shard, including
-    the quantized first pass (pq8 / pq4 / sq ADC) and the SHARD-LOCAL exact
-    re-rank, then the per-shard exact top-k are merged into the global
-    top-k (one O(P·k) reduction over exact distances).
+    the quantized first pass (pq8 / pq4 / sq ADC, or the bin codec's
+    XOR+popcount Hamming + rescore — DESIGN.md §14) and the SHARD-LOCAL
+    exact re-rank, then the per-shard exact top-k are merged into the
+    global top-k (one O(P·k) reduction over exact distances).
 
 Recall of a sharded index is >= the single-shard index at equal per-shard
 L, because each shard runs its own full traversal (more total distance

@@ -1,10 +1,16 @@
-"""Early-termination parameter tuning (paper §3.2, A3).
+"""Index parameter tuning against held-out queries with exact ground truth.
 
-The paper determines (t, tau_max) with a two-stage dry-run: initialize t at
-~60% of L, binary-search tau_max under the recall constraint, then sweep t
-down from 60% toward 30% of L keeping the fastest setting that still meets
-the recall target. This module reproduces that procedure against a held-out
-query sample with exact ground truth.
+Early termination (paper §3.2, A3): the paper determines (t, tau_max) with
+a two-stage dry-run — initialize t at ~60% of L, binary-search tau_max
+under the recall constraint, then sweep t down from 60% toward 30% of L
+keeping the fastest setting that still meets the recall target.
+`tune_early_term` reproduces that procedure.
+
+Quantization (A4, DESIGN.md §13/§14): `tune_quant_kind` sweeps every
+registered quantization family (quantize.quant_variants — the SAME
+registry benchmarks/ablation.py enumerates, asserted in tests to cover
+types.QUANT_KINDS) over one shared graph build and picks the
+smallest-code-bytes family that still meets the recall target.
 """
 from __future__ import annotations
 
@@ -52,3 +58,40 @@ def tune_early_term(index, queries: np.ndarray, gt_ids: np.ndarray,
         if admissible and admissible[1] < best_hops:
             best, best_hops = admissible
     return best
+
+
+def tune_quant_kind(index, queries: np.ndarray, gt_ids: np.ndarray,
+                    recall_target: float = 0.90, pq_m: int = 16):
+    """Sweep every registered quantization family over `index`'s existing
+    graph (one build, quantizer retrained per variant — the quant_ablation
+    clone trick) and return (best_name, rows).
+
+    rows: [{"quant", "recall", "code_bytes"}] for every variant in
+    quantize.quant_variants(pq_m). best_name is the variant with the
+    SMALLEST code bytes/vector whose recall meets recall_target (ties keep
+    the higher recall); falls back to the highest-recall variant when none
+    meets the target."""
+    from repro.core import quantize as qz
+    from repro.core.index import KBest
+    from repro.core.types import QuantConfig
+
+    assert index.graph is not None, "tune_quant_kind needs a graph index"
+    rows = []
+    for name, qkw in qz.quant_variants(pq_m=pq_m).items():
+        cfg = dataclasses.replace(index.config,
+                                  quant=QuantConfig(kmeans_iters=6, **qkw))
+        idx = KBest(cfg)
+        idx.db, idx.graph, idx.entry, idx.order = (index.db, index.graph,
+                                                   index.entry, index.order)
+        idx._train_quant(idx.db)
+        _, ids = idx.search(queries)
+        rows.append({"quant": name,
+                     "recall": recall_at_k(np.asarray(ids), gt_ids,
+                                           cfg.search.k),
+                     "code_bytes": qz.code_bytes_per_vector(idx)})
+    ok = [r for r in rows if r["recall"] >= recall_target]
+    if ok:
+        best = min(ok, key=lambda r: (r["code_bytes"], -r["recall"]))
+    else:
+        best = max(rows, key=lambda r: r["recall"])
+    return best["quant"], rows

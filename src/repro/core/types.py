@@ -20,6 +20,12 @@ SELECT_RULES = ("none", "hnsw", "alpha", "ssg")
 # Index families behind the KBest facade (DESIGN.md §3 graph, §4 ivf).
 INDEX_TYPES = ("graph", "ivf")
 
+# Quantization kinds accepted by QuantConfig — THE single registry
+# (DESIGN.md §13/§14). Sweeps (core/tune.py, benchmarks/ablation.py)
+# enumerate quantize.quant_variants(), which is asserted against this
+# tuple in tests, so a new kind lands in every sweep automatically.
+QUANT_KINDS = ("none", "pq", "pq4", "sq", "bin")
+
 
 @dataclasses.dataclass(frozen=True)
 class BuildConfig:
@@ -65,6 +71,10 @@ class SearchConfig:
                                  # axis is split into batch_B-sized dist
                                  # calls; 0 => one (Q, W*M) call (see §2)
     n_entries: int = 8           # entry points: medoid + (n-1) strided seeds
+    # --- two-stage rescore (kind="bin" only, DESIGN.md §14) ---
+    rescore_factor: int = 8      # overfetch rescore_factor*k Hamming
+                                 # candidates, then exact re-rank; other
+                                 # quant kinds use QuantConfig.rerank
     # --- IVF-only (ignored by the graph index, DESIGN.md §4) ---
     nprobe: int = 8              # probed clusters per query
 
@@ -73,6 +83,7 @@ class SearchConfig:
         assert self.visited_mode in ("queue", "bitmap")
         assert 0.0 < self.et_t_frac <= 1.0
         assert self.nprobe >= 1
+        assert self.rescore_factor >= 1, self.rescore_factor
         # the beam picks W unvisited queue slots per step — more than L
         # slots can never exist, so a wider beam is a config error
         assert 1 <= self.beam_width <= self.L, (self.beam_width, self.L)
@@ -87,10 +98,12 @@ class SearchConfig:
 class QuantConfig:
     """Vector quantization (paper §3.2, A4).
 
-    kind: "none" | "pq" (8-bit, 256-centroid sub-codebooks) | "pq4" (4-bit
-    fast-scan: 16-centroid sub-codebooks, two codes packed per byte, LUT
-    small enough to stay VMEM/register resident — DESIGN.md §13) | "sq"
-    (int8 per-dimension affine).
+    kind (QUANT_KINDS): "none" | "pq" (8-bit, 256-centroid sub-codebooks)
+    | "pq4" (4-bit fast-scan: 16-centroid sub-codebooks, two codes packed
+    per byte, LUT small enough to stay VMEM/register resident — DESIGN.md
+    §13) | "sq" (int8 per-dimension affine) | "bin" (1-bit random-rotation
+    sign codec, u32-packed, XOR+popcount Hamming first pass + exact
+    rescore — DESIGN.md §14; overfetch via SearchConfig.rescore_factor).
     """
 
     kind: str = "none"
@@ -102,7 +115,7 @@ class QuantConfig:
     seed: int = 0
 
     def __post_init__(self):
-        assert self.kind in ("none", "pq", "pq4", "sq")
+        assert self.kind in QUANT_KINDS, self.kind
         if self.kind == "pq4":
             # nbits is authoritative (4); tolerate an explicit pq_bits=4 or
             # the untouched default 8 rather than crash on the natural call

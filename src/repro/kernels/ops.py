@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import batch_dist as _bd
+from repro.kernels import bin_hamming as _bh
 from repro.kernels import gather_dist as _gd
 from repro.kernels import ivf_scan as _iv
 from repro.kernels import pq4_scan as _p4
@@ -65,6 +66,14 @@ def pq4_adc(lut: jnp.ndarray, packed: jnp.ndarray, ids: jnp.ndarray
             ) -> jnp.ndarray:
     """(Q, m, 16), (n, m//2) u8 nibble-packed, (Q, B) -> (Q, B); -1 -> +inf."""
     return _p4.pq4_adc(lut, packed, ids, interpret=_on_cpu())
+
+
+def bin_dist(qcodes: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
+             ) -> jnp.ndarray:
+    """(Q, nw) u32 packed queries, (n, nw) u32 packed codes, (Q, B) ->
+    (Q, B) exact Hamming; -1 ids produce +inf. No lane padding: the packed
+    word axis is tiny (d=128 -> nw=4) and the kernel reduces it wholesale."""
+    return _bh.bin_dist(qcodes, codes, ids, interpret=_on_cpu())
 
 
 def sq_gather_dist(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
@@ -122,6 +131,13 @@ def fused_expand_pq4(lut: jnp.ndarray, packed: jnp.ndarray,
                                 interpret=_on_cpu())
 
 
+def fused_expand_bin(qcodes: jnp.ndarray, codes: jnp.ndarray,
+                     ids: jnp.ndarray, *, L: int, n_beam: int = 1):
+    """bin twin: (Q, nw) u32 packed queries, (n, nw) u32 packed codes."""
+    return _bh.fused_expand_bin(qcodes, codes, ids, L=L, n_beam=n_beam,
+                                interpret=_on_cpu())
+
+
 def ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
              list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *, L: int):
     """(Q, Pl, m, K) luts (Pl in {1, P}), padded lists, (Q, P) probes ->
@@ -147,4 +163,16 @@ def pq4_ivf_scan(luts: jnp.ndarray, list_codes: jnp.ndarray,
     if not interp:
         L = min(1 << (L - 1).bit_length(), list_ids.shape[1])
     return _p4.pq4_ivf_scan(luts, list_codes, list_ids, probe_ids, L=L,
+                            interpret=interp)
+
+
+def bin_ivf_scan(qcodes: jnp.ndarray, list_codes: jnp.ndarray,
+                 list_ids: jnp.ndarray, probe_ids: jnp.ndarray, *, L: int):
+    """bin twin of ivf_scan: (Q, nw) u32 packed queries, (nlist, max_len,
+    nw) u32 packed list codes. Same L clamping/rounding policy."""
+    interp = _on_cpu()
+    L = min(L, list_ids.shape[1])
+    if not interp:
+        L = min(1 << (L - 1).bit_length(), list_ids.shape[1])
+    return _bh.bin_ivf_scan(qcodes, list_codes, list_ids, probe_ids, L=L,
                             interpret=interp)

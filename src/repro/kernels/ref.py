@@ -137,6 +137,42 @@ def pq4_ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
                         probe_ids, L)
 
 
+def bin_dist_ref(qcodes: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """(Q, nw) u32 packed query signs, (n, nw) u32 packed db signs, (Q, B)
+    ids -> (Q, B) f32 Hamming distances (XOR + popcount); invalid ids ->
+    +inf. Tail bits past d are zero on both sides, so they never count."""
+    import jax
+
+    c = codes[jnp.maximum(ids, 0)]                    # (Q, B, nw)
+    x = jnp.bitwise_xor(c, qcodes[:, None, :])
+    out = jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.float32)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
+def fused_expand_bin_ref(qcodes: jnp.ndarray, codes: jnp.ndarray,
+                         ids: jnp.ndarray, L: int, n_beam: int = 1):
+    """bin twin: bin_dist_ref then the sorted-block epilogue."""
+    return sorted_block_ref(bin_dist_ref(qcodes, codes, ids), ids, L, n_beam)
+
+
+def bin_ivf_scan_ref(qcodes: jnp.ndarray, list_codes: jnp.ndarray,
+                     list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
+    """bin twin of ivf_scan_ref: (Q, nw) u32 packed queries against
+    (nlist, max_len, nw) u32 packed list codes; XOR+popcount Hamming,
+    padding (-1) masked to +inf, per-list top-L."""
+    import jax
+
+    codes = list_codes[probe_ids]                     # (Q, P, max_len, nw)
+    ids = list_ids[probe_ids]                         # (Q, P, max_len)
+    x = jnp.bitwise_xor(codes, qcodes[:, None, None, :])
+    d = jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.float32)
+    d = jnp.where(ids >= 0, d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, L)
+    out_ids = jnp.take_along_axis(ids, pos, axis=-1)
+    return -neg, jnp.where(jnp.isfinite(neg), out_ids, -1)
+
+
 def ivf_scan_ref(luts: jnp.ndarray, list_codes: jnp.ndarray,
                  list_ids: jnp.ndarray, probe_ids: jnp.ndarray, L: int):
     """(Q, Pl, m, K) luts (Pl = P, or 1 for probe-independent tables),

@@ -11,12 +11,12 @@ import pytest
 
 from repro.core import queue as qmod
 from repro.core import search as search_mod
-from repro.core.index import KBest, _widen
+from repro.core.index import KBest, _widen, _widen_bin
 from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
                               QuantConfig, SearchConfig)
 from repro.data.vectors import make_dataset
 
-QUANTS = ("none", "pq", "pq4", "sq")
+QUANTS = ("none", "pq", "pq4", "sq", "bin")
 
 
 # --------------------------------------------------------------------------
@@ -169,11 +169,14 @@ def _traversal_operands(idx, scfg, queries):
         op = qz.pq_query_tables(idx.pq.codebooks, ds_q, metric)
     elif quant == "pq4":
         op = qz.pq4_query_tables(idx.pq.codebooks, ds_q, metric)
+    elif quant == "bin":
+        op = qz.bin_query_codes(idx.bin, ds_q)
     else:
         op = ds_q
+    widen = _widen_bin if quant == "bin" else _widen
     return idx.graph, op, idx._entry_ids(scfg.n_entries, idx.db.shape[0]), \
         idx._get_dist_fn(quant if quant != "none" else "full", "ref"), \
-        _widen(scfg)
+        widen(scfg)
 
 
 @pytest.mark.parametrize("visited_mode", ["queue", "bitmap"])

@@ -1,0 +1,261 @@
+"""1-bit binary quantization (DESIGN.md §14): pack/unpack inverse and
+Hamming==sign-disagreement properties (hypothesis-driven in CI, seeded
+sweeps always), kernel-vs-ref exact parity on graph and IVF paths,
+save/load sidecars, sharded parity, rescore_factor monotonicity, the
+quant-kind registry, and the 50k acceptance recall floor."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as qz
+from repro.core import types as types_mod
+from repro.core.index import KBest
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
+from repro.data.vectors import make_dataset, recall_at_k
+
+RNG = np.random.default_rng(31)
+
+# the non-multiple-of-32 cases exercise tail padding: both sides of the
+# XOR leave the pad bits zero, so they never contribute to the Hamming sum
+DIMS = (32, 64, 100, 128)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("bin", max_examples=25, deadline=None)
+    settings.load_profile("bin")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _graph_cfg(dim, metric, **skw):
+    s = dict(L=64, k=10, early_term=False)
+    s.update(skw)
+    return IndexConfig(
+        dim=dim, metric=metric,
+        build=BuildConfig(M=24, knn_k=32, builder="brute", refine_iters=0,
+                          reorder="none"),
+        search=SearchConfig(**s),
+        quant=QuantConfig(kind="bin"))
+
+
+def _ivf_cfg(dim, metric, **skw):
+    s = dict(L=64, k=10, nprobe=8)
+    s.update(skw)
+    return IndexConfig(
+        dim=dim, metric=metric, index_type="ivf",
+        ivf=IVFConfig(nlist=32, kmeans_iters=5, list_pad=8),
+        quant=QuantConfig(kind="bin"),
+        search=SearchConfig(**s))
+
+
+# ------------------------------------------------------------- properties
+def _check_pack_roundtrip(d, n, seed):
+    """unpack_signs(pack_signs(bits), d) == bits, with the packed tail
+    bits of the last word provably zero."""
+    r = np.random.default_rng(seed)
+    bits = r.integers(0, 2, size=(n, d)).astype(np.uint32)
+    packed = qz.pack_signs(jnp.asarray(bits))
+    nw = -(-d // 32)
+    assert packed.shape == (n, nw) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(qz.unpack_signs(packed, d)), bits)
+    if d % 32:
+        tail = np.asarray(packed)[:, -1] >> np.uint32(d % 32)
+        assert np.all(tail == 0)
+
+
+def _check_hamming_is_sign_disagreement(d, n, seed):
+    """Packed XOR+popcount == popcount of elementwise sign disagreement
+    computed on the UNPACKED bits (the bit-level oracle)."""
+    r = np.random.default_rng(seed)
+    a = r.integers(0, 2, size=(1, d)).astype(np.uint32)
+    b = r.integers(0, 2, size=(n, d)).astype(np.uint32)
+    from repro.kernels.ref import bin_dist_ref
+    ids = jnp.arange(n, dtype=jnp.int32)[None]
+    got = np.asarray(bin_dist_ref(qz.pack_signs(jnp.asarray(a)),
+                                  qz.pack_signs(jnp.asarray(b)), ids))[0]
+    np.testing.assert_array_equal(got, (a != b).sum(axis=1))
+
+
+def test_pack_roundtrip_seeded():
+    r = np.random.default_rng(0)
+    for d in DIMS:
+        for _ in range(5):
+            _check_pack_roundtrip(d, int(r.integers(1, 40)),
+                                  int(r.integers(0, 2 ** 30)))
+
+
+def test_hamming_is_sign_disagreement_seeded():
+    r = np.random.default_rng(1)
+    for d in DIMS:
+        for _ in range(5):
+            _check_hamming_is_sign_disagreement(d, int(r.integers(1, 40)),
+                                                int(r.integers(0, 2 ** 30)))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(DIMS), st.integers(1, 40),
+           st.integers(0, 2 ** 30))
+    def test_pack_roundtrip_property(d, n, seed):
+        _check_pack_roundtrip(d, n, seed)
+
+    @given(st.sampled_from(DIMS), st.integers(1, 40),
+           st.integers(0, 2 ** 30))
+    def test_hamming_is_sign_disagreement_property(d, n, seed):
+        _check_hamming_is_sign_disagreement(d, n, seed)
+
+
+# ---------------------------------------------------------------- encoding
+def test_rotation_is_orthonormal():
+    st_ = qz.bin_train(jnp.asarray(RNG.normal(size=(50, 100)),
+                                   jnp.float32), QuantConfig(kind="bin"))
+    r = np.asarray(st_.rot)
+    np.testing.assert_allclose(r @ r.T, np.eye(100), atol=1e-4)
+    assert st_.n_words == 4   # ceil(100/32)
+
+
+def test_encode_deterministic_in_seed():
+    x = jnp.asarray(RNG.normal(size=(64, 96)), jnp.float32)
+    a = qz.bin_encode(qz.bin_train(x, QuantConfig(kind="bin", seed=3)), x)
+    b = qz.bin_encode(qz.bin_train(x, QuantConfig(kind="bin", seed=3)), x)
+    c = qz.bin_encode(qz.bin_train(x, QuantConfig(kind="bin", seed=4)), x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ----------------------------------------------------------- end-to-end paths
+def test_graph_bin_kernel_impl_matches_ref(deep_ds):
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric)
+    idx = KBest(cfg).add(deep_ds.base)
+    assert idx.bin_codes.dtype == jnp.uint32
+    s_k = dataclasses.replace(cfg.search, dist_impl="kernel")
+    d_r, i_r = idx.search(deep_ds.queries[:8], k=10)
+    d_k, i_k = idx.search(deep_ds.queries[:8], k=10, search_cfg=s_k)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-6)
+
+
+def test_ivf_bin_kernel_impl_matches_ref(deep_ds):
+    cfg = _ivf_cfg(deep_ds.base.shape[1], deep_ds.metric)
+    idx = KBest(cfg).add(deep_ds.base)
+    assert idx.ivf.bin is not None and idx.ivf.pq is None
+    assert idx.ivf.list_codes.dtype == jnp.uint32
+    s_k = dataclasses.replace(cfg.search, dist_impl="kernel")
+    d_r, i_r = idx.search(deep_ds.queries[:8], k=10)
+    d_k, i_k = idx.search(deep_ds.queries[:8], k=10, search_cfg=s_k)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-6)
+
+
+def test_graph_bin_recall_with_rescore(deep_ds):
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric,
+                     L=96, rescore_factor=8)
+    idx = KBest(cfg).add(deep_ds.base)
+    _, i = idx.search(deep_ds.queries, k=10)
+    assert recall_at_k(np.asarray(i), deep_ds.gt_ids, 10) >= 0.75
+
+
+def test_rescore_factor_monotone_recall(deep_ds):
+    """With rescore_factor*k <= L the Hamming traversal is identical
+    across factors and the exact rescore sees a superset of candidates:
+    recall@10 must be non-decreasing in rescore_factor."""
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric, L=64)
+    idx = KBest(cfg).add(deep_ds.base)
+    recs = []
+    for rf in (1, 2, 4, 6):
+        s = dataclasses.replace(cfg.search, rescore_factor=rf)
+        _, ids = idx.search(deep_ds.queries, search_cfg=s)
+        recs.append(recall_at_k(np.asarray(ids), deep_ds.gt_ids, 10))
+    assert all(b >= a for a, b in zip(recs, recs[1:])), recs
+    assert recs[-1] > recs[0], recs   # rescore must actually help
+
+
+def test_bin_code_bytes_32x_under_f32(deep_ds):
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric)
+    idx = KBest(cfg).add(deep_ds.base)
+    d = deep_ds.base.shape[1]
+    assert qz.code_bytes_per_vector(idx) * 32 == 4 * ((d + 31) // 32 * 32)
+
+
+# ---------------------------------------------------------------- save/load
+def test_bin_save_load_roundtrip_graph(tmp_path, deep_ds):
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric)
+    idx = KBest(cfg).add(deep_ds.base)
+    d1, i1 = idx.search(deep_ds.queries[:10], k=10)
+    path = str(tmp_path / "bin_graph.npz")
+    idx.save(path)
+    z = np.load(path)
+    assert "bin_rot" in z and "bin_codes" in z    # the §14 sidecars
+    assert z["bin_codes"].dtype == np.uint32
+    idx2 = KBest.load(path)
+    assert idx2.config.quant.kind == "bin"
+    np.testing.assert_array_equal(np.asarray(idx.bin_codes),
+                                  np.asarray(idx2.bin_codes))
+    d2, i2 = idx2.search(deep_ds.queries[:10], k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+def test_bin_save_load_roundtrip_ivf(tmp_path, deep_ds):
+    cfg = _ivf_cfg(deep_ds.base.shape[1], deep_ds.metric)
+    idx = KBest(cfg).add(deep_ds.base)
+    d1, i1 = idx.search(deep_ds.queries[:10], k=10)
+    path = str(tmp_path / "bin_ivf.npz")
+    idx.save(path)
+    z = np.load(path)
+    assert "ivf_bin_rot" in z and "ivf_codebooks" not in z
+    idx2 = KBest.load(path)
+    assert idx2.ivf.bin is not None and idx2.ivf.pq is None
+    d2, i2 = idx2.search(deep_ds.queries[:10], k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+# ------------------------------------------------------------------ sharded
+def test_sharded_bin_one_shard_parity(deep_ds):
+    from repro.core.sharded import ShardedKBest
+    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric,
+                     L=48, rescore_factor=4)
+    a = KBest(cfg).add(deep_ds.base)
+    b = ShardedKBest(cfg, n_shards=1).add(deep_ds.base)
+    da, ia = a.search(deep_ds.queries)
+    db_, ib = b.search(deep_ds.queries)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db_))
+
+
+# ----------------------------------------------------------------- registry
+def test_quant_variant_registry_covers_quant_kinds():
+    """quantize.quant_variants (what tune.py and benchmarks/ablation.py
+    enumerate) must stay in sync with types.QUANT_KINDS: every accepted
+    kind appears in at least one variant, and every variant's kind is
+    accepted."""
+    variants = qz.quant_variants()
+    kinds = {v["kind"] for v in variants.values()}
+    assert kinds == set(types_mod.QUANT_KINDS)
+    for v in variants.values():
+        QuantConfig(**v)                            # must not raise
+
+
+# ------------------------------------------------------------------- recall
+def test_bin_recall_50k_deep():
+    """Acceptance: the deep_like IVF-bin preset reaches recall@10 >= 0.90
+    on the 50k set — 12 code bytes/vector (96 sign bits), 8x under a
+    per-dimension u8 code, with the deep exact rescore doing the recovery
+    (DESIGN.md §14). Graph-bin at this scale needs a far wider queue for
+    the same floor (see BENCH_bin.json), so the tier-1 floor rides the
+    cheap-to-build IVF preset, as test_pq4 does."""
+    from repro.configs import kbest as kcfg
+    ds = make_dataset("deep_like", n=50_000, n_queries=50, k=10)
+    cfg = kcfg.ivf_bin_index_config("deep_like")
+    idx = KBest(cfg).add(ds.base)
+    _, ids = idx.search(ds.queries, k=10)
+    rec = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert rec >= 0.90, rec
+    assert qz.code_bytes_per_vector(idx) * 8 <= ds.base.shape[1]

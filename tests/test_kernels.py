@@ -145,3 +145,68 @@ def test_batch_dist_l2_nonnegative():
     out = np.asarray(ops.batch_dist(qv, qv, metric="l2"))
     assert np.all(out >= 0)
     assert np.allclose(np.diag(out), 0.0, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# 1-bit Hamming kernels (DESIGN.md §14). Distances are small-integer
+# popcount sums represented exactly in f32, so parity with the ref is
+# EXACT equality — any allclose tolerance here would hide a bit-twiddling
+# bug in the SWAR popcount ladder.
+# --------------------------------------------------------------------------
+def _bin_codes(n, d):
+    from repro.core import quantize as qz
+    bits = jnp.asarray(RNG.integers(0, 2, size=(n, d)).astype(np.uint32))
+    return qz.pack_signs(bits)
+
+
+@pytest.mark.parametrize("q,b,n,d", [
+    (2, 9, 64, 32),      # single packed word
+    (5, 17, 200, 100),   # non-multiple-of-32 tail (4 words, 28 pad bits)
+    (4, 33, 150, 128),   # aligned multi-word
+])
+def test_bin_dist(q, b, n, d):
+    qcodes = _bin_codes(q, d)
+    codes = _bin_codes(n, d)
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, b)).astype(np.int32))
+    out = np.asarray(ops.bin_dist(qcodes, codes, ids))
+    exp = np.asarray(ref.bin_dist_ref(qcodes, codes, ids))
+    np.testing.assert_array_equal(out, exp)
+    fin = out[np.isfinite(out)]
+    assert np.array_equal(fin, np.round(fin))   # integral Hamming counts
+
+
+def test_bin_dist_all_invalid():
+    qcodes, codes = _bin_codes(2, 64), _bin_codes(50, 64)
+    ids = jnp.full((2, 5), -1, jnp.int32)
+    assert np.all(np.isinf(np.asarray(ops.bin_dist(qcodes, codes, ids))))
+
+
+@pytest.mark.parametrize("q,c,w,n,d,L", [
+    (3, 8, 1, 60, 32, 8),     # W=1 degenerate beam
+    (5, 24, 4, 150, 100, 16), # beam wider than top-L, padded tail dim
+    (2, 6, 3, 40, 128, 16),   # L > C: block shorter than the queue
+])
+def test_fused_expand_bin(q, c, w, n, d, L):
+    qcodes = _bin_codes(q, d)
+    codes = _bin_codes(n, d)
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, c)).astype(np.int32))
+    out = ops.fused_expand_bin(qcodes, codes, ids, L=L, n_beam=w)
+    exp = ref.fused_expand_bin_ref(qcodes, codes, ids, L, w)
+    for a, b_ in zip(out, exp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_bin_ivf_scan():
+    from repro.core import quantize as qz
+    nlist, maxlen, d, q, L = 6, 32, 96, 4, 8
+    list_codes = jnp.stack([_bin_codes(maxlen, d) for _ in range(nlist)])
+    ids = RNG.permutation(nlist * maxlen)[: nlist * maxlen].reshape(
+        nlist, maxlen).astype(np.int32)
+    ids[:, 27:] = -1                                     # ragged tails
+    list_ids = jnp.asarray(ids)
+    qcodes = _bin_codes(q, d)
+    probes = jnp.asarray(RNG.integers(0, nlist, size=(q, 3)).astype(np.int32))
+    dk, ik = ops.bin_ivf_scan(qcodes, list_codes, list_ids, probes, L=L)
+    de, ie = ref.bin_ivf_scan_ref(qcodes, list_codes, list_ids, probes, L)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(de))
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ie))
