@@ -36,10 +36,18 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quantize as qz
 from repro.core.index import KBest
 from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
                               QuantConfig, SearchConfig)
 from repro.data.vectors import ALL_DATASETS, make_dataset, recall_at_k
+
+# IVF sweep rows derive from THE registry (quantize.IVF_QUANT_KINDS) so a
+# new IVF-capable kind appears here automatically; the per-kind kwargs are
+# run_ivf overrides (bin: two-stage rescore needs the wider queue).
+_IVF_KIND_KW = {kind: (dict(rescore_factor=16, L=192) if kind == "bin"
+                       else {}) for kind in qz.IVF_QUANT_KINDS}
+IVF_VARIANT_NAMES = tuple(f"ivf-{kind}" for kind in qz.IVF_QUANT_KINDS)
 
 VARIANTS = {
     "hnsw-style": dict(select_rule="alpha", alpha=1.0, search_passes=0,
@@ -158,10 +166,11 @@ def run(n: int = 4000, n_queries: int = 100, k: int = 10,
     for ds_name in ALL_DATASETS:
         ds = make_dataset(ds_name, n=n, n_queries=n_queries, k=k)
         nprobes = (4, 8, 16) if quick else (4, 8, 16, 32)
-        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq"))
-        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="pq4"))
-        rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind="bin",
-                            rescore_factor=16, L=192))
+        # one ivf-<kind> row-set per IVF-capable registry kind; bin's flat
+        # Hamming scan needs the wide-queue + deep-rescore overrides
+        for kind in _IVF_KIND_KW:
+            rows.extend(run_ivf(ds, k, nprobes=nprobes, quant_kind=kind,
+                                **_IVF_KIND_KW[kind]))
         for variant, bkw in VARIANTS.items():
             cfg = IndexConfig(
                 dim=ds.base.shape[1], metric=ds.metric,
@@ -360,7 +369,7 @@ def main(quick=False):
     best = qps_at_recall(rows, 0.9)
     for ds in ALL_DATASETS:
         line = [f"{ds:12s}"]
-        for v in list(VARIANTS) + ["ivf-pq", "ivf-pq4", "ivf-bin"]:
+        for v in list(VARIANTS) + list(IVF_VARIANT_NAMES):
             e = best.get((ds, v))
             line.append(f"{v}={1e3*e[0]:.2f}" if e else f"{v}=n/a")
         print("  ".join(line))

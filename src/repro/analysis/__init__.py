@@ -1,0 +1,48 @@
+"""kbest-lint: AST-based invariant checks over the KBest tree
+(DESIGN.md §15).
+
+Five checks, each a module with `run(tree) -> List[Violation]`:
+
+  kernel_parity   every Pallas kernel has a jnp oracle, an ops.py
+                  dispatch entry, and a kernel-vs-ref parity test
+  registry        QUANT_KINDS/quant_variants wired through dispatch,
+                  save/load, presets, ablation; no hand quant lists
+  dead_knobs      every config dataclass field is read somewhere
+  tracing_safety  no Python control flow on traced values in kernel
+                  bodies / jit entry points
+  vmem_budget     per-kernel BlockSpec+scratch residency under budget
+
+Pure stdlib (`ast` only) — runs without jax installed, and runs on
+deliberately-broken fixture trees. CLI: `python -m repro.analysis`.
+"""
+from pathlib import Path
+from typing import Dict, List
+
+from repro.analysis import knobs, parity, registry, tracing, vmem
+from repro.analysis.common import Tree, Violation
+
+CHECKS = {
+    parity.CHECK: parity.run,
+    registry.CHECK: registry.run,
+    knobs.CHECK: knobs.run,
+    tracing.CHECK: tracing.run,
+    vmem.CHECK: vmem.run,
+}
+
+
+def default_root() -> Path:
+    """The checkout containing this package: .../src/repro/analysis ->
+    three parents up."""
+    return Path(__file__).resolve().parents[3]
+
+
+def run_check(name: str, root) -> List[Violation]:
+    return CHECKS[name](Tree(root))
+
+
+def run_all(root) -> List[Violation]:
+    tree = Tree(root)
+    out: List[Violation] = []
+    for fn in CHECKS.values():
+        out.extend(fn(tree))
+    return out

@@ -1,0 +1,42 @@
+"""CLI for kbest-lint: `python -m repro.analysis [--report] [--check NAME]
+[--root PATH]`. Exits 0 iff the tree is violation-free."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import CHECKS, default_root, run_all, run_check, vmem
+from repro.analysis.common import Tree
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant checks for the KBest tree "
+                    "(DESIGN.md §15)")
+    ap.add_argument("--check", choices=sorted(CHECKS),
+                    help="run a single check (default: all five)")
+    ap.add_argument("--report", action="store_true",
+                    help="also print the per-kernel VMEM residency table")
+    ap.add_argument("--root", default=None,
+                    help="tree to check (default: this checkout)")
+    args = ap.parse_args(argv)
+
+    root = args.root if args.root is not None else default_root()
+    if args.report:
+        print(vmem.report(Tree(root)))
+        print()
+
+    violations = (run_check(args.check, root) if args.check
+                  else run_all(root))
+    for v in violations:
+        print(v)
+    names = sorted({v.check for v in violations})
+    print(f"kbest-lint: {len(violations)} violation(s)"
+          + (f" [{', '.join(names)}]" if names else "")
+          + f" in {root}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Shared AST plumbing for kbest-lint (DESIGN.md §15).
+
+Everything here is pure `ast` over source text — the checks never import
+the modules they inspect. That keeps the lint runnable without jax (the
+CI lint lane needs only the stdlib), makes it safe on seeded-violation
+fixture trees that are deliberately broken, and guarantees the checker
+sees the code as written, not as decorated/jitted at import time.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# Directories never scanned: fixture trees hold deliberate violations,
+# __pycache__ holds no source.
+EXCLUDED_DIRS = {"analysis_fixtures", "__pycache__"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One lint finding, pointing at a repo-relative file:line."""
+    check: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"
+
+
+class Tree:
+    """Lazy AST view of a checkout rooted at a directory containing
+    src/ (and usually tests/ + benchmarks/). Parsed modules are cached;
+    files that are missing or unparsable parse to None — checks that
+    require them report that as a violation rather than crashing, which
+    is what lets minimal fixture trees fire each check."""
+
+    def __init__(self, root) -> None:
+        self.root = Path(root)
+        self._cache: Dict[str, Optional[ast.Module]] = {}
+
+    def exists(self, rel: str) -> bool:
+        return (self.root / rel).is_file()
+
+    def parse(self, rel: str) -> Optional[ast.Module]:
+        if rel not in self._cache:
+            try:
+                src = (self.root / rel).read_text()
+                self._cache[rel] = ast.parse(src, filename=rel)
+            except (OSError, SyntaxError, ValueError):
+                self._cache[rel] = None
+        return self._cache[rel]
+
+    def iter_py(self, *subdirs: str) -> Iterator[str]:
+        """Repo-relative paths of every .py under the given subtrees,
+        sorted, with EXCLUDED_DIRS pruned."""
+        for sub in subdirs:
+            base = self.root / sub
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                rel = p.relative_to(self.root)
+                # exclusion is root-relative: a fixture tree scanned AS
+                # the root is fully visible, but fixture trees inside a
+                # scanned checkout stay invisible
+                if EXCLUDED_DIRS.intersection(rel.parts):
+                    continue
+                yield str(rel)
+
+
+def missing_file(check: str, rel: str, why: str) -> Violation:
+    return Violation(check, rel, 1, f"expected file is missing or "
+                     f"unparsable ({why})")
+
+
+# ---------------------------------------------------------------- AST helpers
+
+def top_level_functions(mod: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in mod.body if isinstance(n, ast.FunctionDef)}
+
+
+def class_def(mod: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for n in mod.body:
+        if isinstance(n, ast.ClassDef) and n.name == name:
+            return n
+    return None
+
+
+def methods_of(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
+
+
+def dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    """(name, lineno) of annotated fields — how frozen-dataclass configs
+    declare their knobs (AnnAssign with a plain Name target)."""
+    out = []
+    for n in cls.body:
+        if isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+            out.append((n.target.id, n.lineno))
+    return out
+
+
+def referenced_names(node: ast.AST) -> Set[str]:
+    """Every Name id and Attribute attr under `node` — the loose
+    'does this file mention token X' relation used for parity-test and
+    registry-usage checks."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def string_constants(node: ast.AST) -> Set[str]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def calls_to(node: ast.AST, fn_name: str) -> Iterator[ast.Call]:
+    """Call sites of `fn_name`, whether spelled bare or as an attribute
+    (pl.BlockSpec and BlockSpec both match 'BlockSpec')."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            if (isinstance(f, ast.Name) and f.id == fn_name) or \
+                    (isinstance(f, ast.Attribute) and f.attr == fn_name):
+                yield n
+
+
+def assigned_tuple_of_strings(mod: ast.Module, var: str
+                              ) -> Optional[Tuple[str, ...]]:
+    """Value of a module-level `VAR = ("a", "b", ...)` assignment."""
+    for n in mod.body:
+        if isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == var for t in n.targets):
+            if isinstance(n.value, (ast.Tuple, ast.List)):
+                elts = n.value.elts
+                if all(isinstance(e, ast.Constant) and
+                       isinstance(e.value, str) for e in elts):
+                    return tuple(e.value for e in elts)
+    return None
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

@@ -1,0 +1,95 @@
+"""Check 3 — dead config knobs (DESIGN.md §15).
+
+Every field of SearchConfig / IndexConfig / QuantConfig must be read
+somewhere in src/ outside core/types.py. A knob nobody reads is worse
+than missing: callers set it, tests sweep it, benchmarks report it — and
+nothing changes (the `batch_B` bug, dead for two PRs before anyone
+noticed the beam path ignored it).
+
+Liveness is attribute-read based with property bridging: a field only
+read by a property on its own class stays live iff that property (or a
+property chain from it) is itself read externally — `max_hops` is live
+through `hops_bound`, `pq_bits` through `nbits` -> `ksub`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.common import (Tree, Violation, class_def,
+                                   dataclass_fields, missing_file)
+
+CHECK = "dead_knobs"
+TYPES = "src/repro/core/types.py"
+CLASSES = ("SearchConfig", "IndexConfig", "QuantConfig")
+ANALYSIS_PKG = "src/repro/analysis"
+
+
+def _is_property(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(d, ast.Name) and d.id == "property"
+               for d in fn.decorator_list)
+
+
+def _self_reads(fn: ast.FunctionDef) -> Set[str]:
+    """Attribute names read off `self` inside a method body."""
+    out: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Load) \
+                and isinstance(n.value, ast.Name) and n.value.id == "self":
+            out.add(n.attr)
+    return out
+
+
+def _external_attr_reads(tree: Tree) -> Set[str]:
+    """Every attribute name read (Load context) anywhere in src/ outside
+    the defining module and the lint package itself."""
+    out: Set[str] = set()
+    for rel in tree.iter_py("src"):
+        if rel == TYPES or rel.startswith(ANALYSIS_PKG):
+            continue
+        mod = tree.parse(rel)
+        if mod is None:
+            continue
+        for n in ast.walk(mod):
+            if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Load):
+                out.add(n.attr)
+    return out
+
+
+def run(tree: Tree) -> List[Violation]:
+    types_mod = tree.parse(TYPES)
+    if types_mod is None:
+        return [missing_file(CHECK, TYPES, "config dataclasses live here")]
+
+    ext = _external_attr_reads(tree)
+    violations: List[Violation] = []
+    for cls_name in CLASSES:
+        cls = class_def(types_mod, cls_name)
+        if cls is None:
+            continue
+        fields = dataclass_fields(cls)
+        props: Dict[str, Set[str]] = {
+            m.name: _self_reads(m) for m in cls.body
+            if isinstance(m, ast.FunctionDef) and _is_property(m)}
+
+        # Propagate liveness through property chains to a fixpoint:
+        # externally-read names are live; anything a live property reads
+        # becomes live too.
+        live = {n for n, _ in fields if n in ext} | \
+               {p for p in props if p in ext}
+        changed = True
+        while changed:
+            changed = False
+            for p, reads in props.items():
+                if p in live and not reads.issubset(live):
+                    live |= reads
+                    changed = True
+
+        for name, lineno in fields:
+            if name not in live:
+                violations.append(Violation(
+                    CHECK, TYPES, lineno,
+                    f"config knob {cls_name}.{name} is never read outside "
+                    f"its defining module (dead knob — the batch_B bug "
+                    f"class)"))
+    return violations

@@ -1,0 +1,82 @@
+"""Check 1 — kernel/ref/dispatch parity (DESIGN.md §15).
+
+Every Pallas kernel exported from kernels/*.py must come as a triple:
+the kernel wrapper itself, a `<name>_ref` jnp oracle in kernels/ref.py,
+and a `<name>` dispatch entry in kernels/ops.py — plus at least one test
+under tests/ that references BOTH names (the kernel-vs-ref parity test).
+
+This pins the `("sq", "kernel")` cache-key bug class: a kernel path that
+exists but has no oracle (or no test comparing the two) can silently lie
+about which impl actually ran.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import List, Tuple
+
+from repro.analysis.common import (Tree, Violation, calls_to, missing_file,
+                                   referenced_names, top_level_functions)
+
+CHECK = "kernel_parity"
+KERNELS_DIR = "src/repro/kernels"
+REF = "src/repro/kernels/ref.py"
+OPS = "src/repro/kernels/ops.py"
+NON_KERNEL_FILES = {"__init__.py", "ops.py", "ref.py"}
+
+
+def find_kernels(tree: Tree) -> List[Tuple[str, str, int]]:
+    """(module_rel, name, lineno) for every public top-level function in
+    kernels/*.py whose body reaches pallas_call."""
+    out = []
+    for rel in tree.iter_py(KERNELS_DIR):
+        if PurePosixPath(rel).name in NON_KERNEL_FILES:
+            continue
+        mod = tree.parse(rel)
+        if mod is None:
+            continue
+        for fn in top_level_functions(mod).values():
+            if fn.name.startswith("_"):
+                continue
+            if any(True for _ in calls_to(fn, "pallas_call")):
+                out.append((rel, fn.name, fn.lineno))
+    return out
+
+
+def run(tree: Tree) -> List[Violation]:
+    violations: List[Violation] = []
+    kernels = find_kernels(tree)
+
+    ref_mod = tree.parse(REF)
+    ops_mod = tree.parse(OPS)
+    ref_names = set(top_level_functions(ref_mod)) if ref_mod else set()
+    ops_names = set(top_level_functions(ops_mod)) if ops_mod else set()
+    if kernels and ref_mod is None:
+        violations.append(missing_file(CHECK, REF, "jnp oracles live here"))
+    if kernels and ops_mod is None:
+        violations.append(missing_file(CHECK, OPS, "dispatch entries live here"))
+
+    test_refs = []
+    for rel in tree.iter_py("tests"):
+        mod = tree.parse(rel)
+        if mod is not None:
+            test_refs.append(referenced_names(mod))
+
+    for rel, name, lineno in kernels:
+        oracle = name + "_ref"
+        if ref_mod is not None and oracle not in ref_names:
+            violations.append(Violation(
+                CHECK, rel, lineno,
+                f"Pallas kernel '{name}' has no jnp oracle '{oracle}' in "
+                f"kernels/ref.py"))
+        if ops_mod is not None and name not in ops_names:
+            violations.append(Violation(
+                CHECK, rel, lineno,
+                f"Pallas kernel '{name}' has no dispatch entry "
+                f"'def {name}' in kernels/ops.py"))
+        if not any(name in refs and oracle in refs for refs in test_refs):
+            violations.append(Violation(
+                CHECK, rel, lineno,
+                f"no parity test under tests/ references both '{name}' "
+                f"and '{oracle}' (kernel-vs-ref comparison missing)"))
+    return violations

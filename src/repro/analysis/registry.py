@@ -1,0 +1,220 @@
+"""Check 2 — quant-registry exhaustiveness (DESIGN.md §15).
+
+`types.QUANT_KINDS` and `quantize.quant_variants` are THE registry of
+quantization families. Every kind must be wired through the KBest
+dispatch (`_get_dist_fn` / `_get_expand_fn`), the save/load sidecar
+arrays, a configs/kbest.py preset, and the benchmarks/ablation.py sweep
+— and tests/benchmarks must not hand-enumerate quant lists (the drift
+bug class: a new kind lands in the registry but not in the sweeps).
+
+The per-kind sidecar tokens live in KIND_SIDECARS below: adding a kind
+to QUANT_KINDS without registering its persisted-array names here fails
+the lint, which is exactly the reminder that save()/load() need a case.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import (Tree, Violation, assigned_tuple_of_strings,
+                                   class_def, keyword_arg, methods_of,
+                                   missing_file, referenced_names,
+                                   string_constants)
+
+CHECK = "registry"
+TYPES = "src/repro/core/types.py"
+QUANTIZE = "src/repro/core/quantize.py"
+INDEX = "src/repro/core/index.py"
+PRESETS = "src/repro/configs/kbest.py"
+ABLATION = "benchmarks/ablation.py"
+
+# kind -> array keys save() must write and load() must read for it.
+# "none" persists nothing beyond db/graph. A kind missing from this map
+# is itself a violation (forces the sidecar story to be decided with the
+# kind, not discovered at load time).
+KIND_SIDECARS: Dict[str, Tuple[str, ...]] = {
+    "none": (),
+    "pq": ("pq_codebooks", "pq_codes", "ivf_codebooks"),
+    "pq4": ("pq_codebooks", "pq_codes", "ivf_codebooks"),
+    "sq": ("sq_scale", "sq_zero", "sq_codes"),
+    "bin": ("bin_rot", "bin_codes", "ivf_bin_rot"),
+}
+
+# Hand-list detection: a single list/tuple/set literal whose direct
+# elements include >= this many registry names is treated as a
+# hand-maintained enumeration. 2-element pairs like ("graph", "pq4")
+# parametrize cases legitimately; 3+ is a sweep that must derive from
+# quant_variants instead.
+HAND_LIST_MIN = 3
+
+
+def _variants(mod: ast.Module) -> Tuple[Set[str], Set[str], Optional[int]]:
+    """(variant_names, kinds_covered, lineno) from quant_variants()'s
+    returned dict literal; kinds come from dict(kind="x") / {"kind": "x"}
+    values."""
+    for n in mod.body:
+        if isinstance(n, ast.FunctionDef) and n.name == "quant_variants":
+            names: Set[str] = set()
+            kinds: Set[str] = set()
+            for d in ast.walk(n):
+                if not isinstance(d, ast.Dict):
+                    continue
+                for k, v in zip(d.keys, d.values):
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                        if k.value == "kind" and isinstance(v, ast.Constant):
+                            kinds.add(v.value)
+                        else:
+                            names.add(k.value)
+            for call in ast.walk(n):
+                if isinstance(call, ast.Call):
+                    kw = keyword_arg(call, "kind")
+                    if isinstance(kw, ast.Constant) and isinstance(kw.value, str):
+                        kinds.add(kw.value)
+            return names, kinds, n.lineno
+    return set(), set(), None
+
+
+def run(tree: Tree) -> List[Violation]:
+    violations: List[Violation] = []
+
+    types_mod = tree.parse(TYPES)
+    if types_mod is None:
+        return [missing_file(CHECK, TYPES, "QUANT_KINDS registry lives here")]
+    kinds = assigned_tuple_of_strings(types_mod, "QUANT_KINDS")
+    if kinds is None:
+        return [Violation(CHECK, TYPES, 1,
+                          "QUANT_KINDS tuple-of-strings not found")]
+
+    # --- quant_variants covers every kind, and only registered kinds
+    qz_mod = tree.parse(QUANTIZE)
+    if qz_mod is None:
+        violations.append(missing_file(CHECK, QUANTIZE,
+                                       "quant_variants lives here"))
+    else:
+        names, vkinds, lineno = _variants(qz_mod)
+        if lineno is None:
+            violations.append(Violation(CHECK, QUANTIZE, 1,
+                                        "quant_variants() not found"))
+        else:
+            for kind in kinds:
+                if kind not in vkinds:
+                    violations.append(Violation(
+                        CHECK, QUANTIZE, lineno,
+                        f"quant_variants() has no variant with "
+                        f"kind='{kind}' (registry drift)"))
+            for kind in sorted(vkinds - set(kinds)):
+                violations.append(Violation(
+                    CHECK, QUANTIZE, lineno,
+                    f"quant_variants() uses kind='{kind}' which is not in "
+                    f"types.QUANT_KINDS"))
+        ivf_kinds = assigned_tuple_of_strings(qz_mod, "IVF_QUANT_KINDS")
+        if ivf_kinds is None:
+            violations.append(Violation(
+                CHECK, QUANTIZE, 1,
+                "IVF_QUANT_KINDS tuple not found (benchmarks derive their "
+                "ivf-* rows from it)"))
+        else:
+            for kind in ivf_kinds:
+                if kind not in kinds:
+                    violations.append(Violation(
+                        CHECK, QUANTIZE, 1,
+                        f"IVF_QUANT_KINDS contains '{kind}' which is not "
+                        f"in types.QUANT_KINDS"))
+
+    # --- KBest dispatch handles every kind ("none" dispatches as "full")
+    idx_mod = tree.parse(INDEX)
+    if idx_mod is None:
+        violations.append(missing_file(CHECK, INDEX,
+                                       "KBest dispatch lives here"))
+    else:
+        kbest = class_def(idx_mod, "KBest")
+        meths = methods_of(kbest) if kbest else {}
+        for meth_name in ("_get_dist_fn", "_get_expand_fn"):
+            meth = meths.get(meth_name)
+            if meth is None:
+                violations.append(Violation(
+                    CHECK, INDEX, 1, f"KBest.{meth_name} not found"))
+                continue
+            strings = string_constants(meth)
+            for kind in kinds:
+                token = "full" if kind == "none" else kind
+                if token not in strings:
+                    violations.append(Violation(
+                        CHECK, INDEX, meth.lineno,
+                        f"KBest.{meth_name} does not handle kind "
+                        f"'{kind}' (expected the '{token}' branch)"))
+        # --- save/load persist every kind's sidecar arrays
+        for meth_name in ("save", "load"):
+            meth = meths.get(meth_name)
+            if meth is None:
+                violations.append(Violation(
+                    CHECK, INDEX, 1, f"KBest.{meth_name} not found"))
+                continue
+            strings = string_constants(meth)
+            for kind in kinds:
+                if kind not in KIND_SIDECARS:
+                    violations.append(Violation(
+                        CHECK, INDEX, meth.lineno,
+                        f"kind '{kind}' has no sidecar-array entry in "
+                        f"analysis/registry.py KIND_SIDECARS — register "
+                        f"its persisted arrays with the kind"))
+                    continue
+                for token in KIND_SIDECARS[kind]:
+                    if token not in strings:
+                        violations.append(Violation(
+                            CHECK, INDEX, meth.lineno,
+                            f"KBest.{meth_name} does not handle the "
+                            f"'{token}' array of kind '{kind}'"))
+
+    # --- configs/kbest.py constructs a preset for every non-none kind
+    cfg_mod = tree.parse(PRESETS)
+    if cfg_mod is None:
+        violations.append(missing_file(CHECK, PRESETS,
+                                       "per-kind presets live here"))
+    else:
+        preset_kinds: Set[str] = set()
+        for call in ast.walk(cfg_mod):
+            if isinstance(call, ast.Call):
+                kw = keyword_arg(call, "kind")
+                if isinstance(kw, ast.Constant) and isinstance(kw.value, str):
+                    preset_kinds.add(kw.value)
+        for kind in kinds:
+            if kind != "none" and kind not in preset_kinds:
+                violations.append(Violation(
+                    CHECK, PRESETS, 1,
+                    f"no preset constructs QuantConfig(kind='{kind}')"))
+
+    # --- the ablation sweep derives from the registry
+    abl_mod = tree.parse(ABLATION)
+    if abl_mod is None:
+        violations.append(missing_file(CHECK, ABLATION,
+                                       "quant ablation lives here"))
+    elif "quant_variants" not in referenced_names(abl_mod):
+        violations.append(Violation(
+            CHECK, ABLATION, 1,
+            "quant ablation does not derive its sweep from "
+            "quantize.quant_variants"))
+
+    # --- no hand-enumerated quant lists in tests/ or benchmarks/
+    match_names = set(kinds) | {"full", "pq8", "pq4+u8lut"} \
+        | {"ivf-" + k for k in kinds}
+    if qz_mod is not None:
+        vnames, _, _ = _variants(qz_mod)
+        match_names |= vnames | {"ivf-" + v for v in vnames}
+    for rel in tree.iter_py("tests", "benchmarks"):
+        mod = tree.parse(rel)
+        if mod is None:
+            continue
+        for node in ast.walk(mod):
+            if not isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+                continue
+            hits = [e.value for e in node.elts
+                    if isinstance(e, ast.Constant) and
+                    isinstance(e.value, str) and e.value in match_names]
+            if len(hits) >= HAND_LIST_MIN:
+                violations.append(Violation(
+                    CHECK, rel, node.lineno,
+                    f"hand-enumerated quant list {hits} — derive it from "
+                    f"quantize.quant_variants / IVF_QUANT_KINDS so new "
+                    f"kinds cannot drift out of the sweep"))
+    return violations

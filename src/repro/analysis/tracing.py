@@ -1,0 +1,206 @@
+"""Check 4 — tracing safety (DESIGN.md §15).
+
+Python-level control flow on traced values is the classic jax footgun:
+`if x > 0`, `assert x.sum() == 1`, `float(x)` or `x.item()` inside a
+jitted function either crash at trace time (TracerBoolConversionError)
+or silently concretize and bake one value into the compiled program.
+Inside a Pallas kernel body the same constructs freeze one grid step's
+data into every step.
+
+Scope (AST-only approximation of "jit-reachable"):
+  A. Pallas kernel bodies — any function in kernels/*.py with a
+     parameter ending in `_ref` (the Ref-passing convention), nested
+     factory-made kernels included.
+  B. jit entry points — top-level functions in core/*.py and
+     kernels/*.py decorated with `jax.jit` or
+     `functools.partial(jax.jit, static_argnames=...)`; every
+     non-static parameter is traced, and nested def/lambda parameters
+     (scan/cond bodies, index maps) are traced too.
+
+Taint propagates through assignments; it is cut by `.shape/.ndim/
+.dtype/.size`, `len()`, and `is None` comparisons — those are static
+facts about traced values, and branching on them is exactly how this
+codebase selects kernel variants.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.common import Tree, Violation
+
+CHECK = "tracing_safety"
+SCAN_DIRS = ("src/repro/core", "src/repro/kernels")
+
+# Attribute reads that yield static (python-int/dtype) facts: accessing
+# them on a traced value produces an UNtraced value.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+# Calls whose result is static regardless of argument taint.
+STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "range"}
+# Python casts that concretize a tracer — flagged when fed a traced value.
+CAST_CALLS = {"float", "int", "bool"}
+
+
+def _is_none_compare(test: ast.expr) -> bool:
+    return isinstance(test, ast.Compare) and \
+        all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+
+
+def _jit_static_names(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """None if `fn` is not jit-decorated; else its static_argnames."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, (ast.Name, ast.Attribute)):
+            name = dec.id if isinstance(dec, ast.Name) else dec.attr
+            if name == "jit":
+                return set()
+        if isinstance(dec, ast.Call):
+            f = dec.func
+            fname = f.id if isinstance(f, ast.Name) else \
+                f.attr if isinstance(f, ast.Attribute) else ""
+            if fname == "partial" and dec.args:
+                a0 = dec.args[0]
+                a0name = a0.id if isinstance(a0, ast.Name) else \
+                    a0.attr if isinstance(a0, ast.Attribute) else ""
+                if a0name == "jit":
+                    static: Set[str] = set()
+                    for kw in dec.keywords:
+                        if kw.arg == "static_argnames":
+                            for c in ast.walk(kw.value):
+                                if isinstance(c, ast.Constant) and \
+                                        isinstance(c.value, str):
+                                    static.add(c.value)
+                    return static
+    return None
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    params = a.posonlyargs + a.args + a.kwonlyargs
+    if a.vararg:
+        params = params + [a.vararg]
+    if a.kwarg:
+        params = params + [a.kwarg]
+    return [p.arg for p in params]
+
+
+class _Taint:
+    def __init__(self, seed: Set[str]) -> None:
+        self.names = set(seed)
+
+    def expr(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Compare) and _is_none_compare(node):
+            return False
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in STATIC_CALLS:
+                return False
+            parts = [f] + list(node.args) + \
+                [kw.value for kw in node.keywords]
+            return any(self.expr(p) for p in parts)
+        if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+            return False
+        return any(self.expr(c) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    def _taint_target(self, target: ast.expr) -> bool:
+        changed = False
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name) and n.id not in self.names:
+                self.names.add(n.id)
+                changed = True
+        return changed
+
+    def propagate(self, fn) -> None:
+        """Fixpoint pass: assignments from tainted expressions taint
+        their targets; nested function/lambda parameters are tainted
+        (scan/cond bodies and index maps receive traced operands)."""
+        changed = True
+        while changed:
+            changed = False
+            for n in ast.walk(fn):
+                if isinstance(n, (ast.FunctionDef, ast.Lambda)) and n is not fn:
+                    for p in _param_names(n):
+                        if p not in self.names:
+                            self.names.add(p)
+                            changed = True
+                elif isinstance(n, ast.Assign):
+                    if self.expr(n.value):
+                        for t in n.targets:
+                            changed |= self._taint_target(t)
+                elif isinstance(n, (ast.AnnAssign, ast.AugAssign,
+                                    ast.NamedExpr)):
+                    if n.value is not None and self.expr(n.value):
+                        changed |= self._taint_target(n.target)
+                elif isinstance(n, ast.For):
+                    if self.expr(n.iter):
+                        changed |= self._taint_target(n.target)
+
+
+def _flag(fn, seed: Set[str], rel: str, where: str,
+          violations: List[Violation]) -> None:
+    taint = _Taint(seed)
+    taint.propagate(fn)
+    for n in ast.walk(fn):
+        if isinstance(n, (ast.If, ast.While, ast.IfExp)):
+            kind = {"If": "if", "While": "while",
+                    "IfExp": "conditional expression"}[type(n).__name__]
+            if not _is_none_compare(n.test) and taint.expr(n.test):
+                violations.append(Violation(
+                    CHECK, rel, n.lineno,
+                    f"Python-level `{kind}` on a traced value in {where} "
+                    f"(crashes or concretizes at trace time)"))
+        elif isinstance(n, ast.Assert):
+            if not _is_none_compare(n.test) and taint.expr(n.test):
+                violations.append(Violation(
+                    CHECK, rel, n.lineno,
+                    f"`assert` on a traced value in {where} (trace-time "
+                    f"TracerBoolConversionError)"))
+        elif isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Name) and f.id in CAST_CALLS and \
+                    n.args and taint.expr(n.args[0]):
+                violations.append(Violation(
+                    CHECK, rel, n.lineno,
+                    f"`{f.id}()` concretizes a traced value in {where}"))
+            elif isinstance(f, ast.Attribute) and f.attr == "item" and \
+                    taint.expr(f.value):
+                violations.append(Violation(
+                    CHECK, rel, n.lineno,
+                    f"`.item()` concretizes a traced value in {where}"))
+
+
+def run(tree: Tree) -> List[Violation]:
+    violations: List[Violation] = []
+    for rel in tree.iter_py(*SCAN_DIRS):
+        mod = tree.parse(rel)
+        if mod is None:
+            continue
+        in_kernels = "kernels" in PurePosixPath(rel).parts
+        seen_kernel_bodies = set()
+        if in_kernels:
+            for fn in ast.walk(mod):
+                if isinstance(fn, ast.FunctionDef):
+                    refs = {p for p in _param_names(fn) if p.endswith("_ref")}
+                    if refs:
+                        seen_kernel_bodies.add(fn)
+                        _flag(fn, refs, rel,
+                              f"Pallas kernel body '{fn.name}'", violations)
+        for fn in mod.body:
+            if not isinstance(fn, ast.FunctionDef) or fn in seen_kernel_bodies:
+                continue
+            static = _jit_static_names(fn)
+            if static is None:
+                continue
+            traced = {p for p in _param_names(fn)
+                      if p not in static and p != "self"}
+            _flag(fn, traced, rel, f"jit function '{fn.name}'", violations)
+    return violations

@@ -109,6 +109,16 @@ def bin_index_config(dataset: str) -> IndexConfig:
                                    rescore_factor=b["rescore_factor"]))
 
 
+def sq_index_config(dataset: str) -> IndexConfig:
+    """Graph preset with the int8 scalar quantizer (DESIGN.md §13): per-dim
+    affine u8 codes traversed directly (gather+dequant fused in the kernel
+    path), exact re-rank of the default 4*k overfetch. SQ is nearly
+    recall-transparent at 4x-smaller codes, so the tuned graph knobs carry
+    over unchanged."""
+    return dataclasses.replace(index_config(dataset),
+                               quant=QuantConfig(kind="sq"))
+
+
 def ivf_bin_index_config(dataset: str) -> IndexConfig:
     """IVF preset with the 1-bit sign codec (DESIGN.md §14): XOR+popcount
     list scans (no LUT stage) + exact rescore. The deep_like preset is the

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from pathlib import Path
 from typing import Optional, Tuple
 
@@ -545,8 +546,16 @@ def _meta_path(p: Path) -> Path:
 def _known_fields(cls, d: dict) -> dict:
     """Drop keys a (possibly older) checkout's dataclass doesn't know, so
     metadata written by newer versions (e.g. pq4-era QuantConfig fields)
-    still loads instead of raising TypeError."""
+    still loads instead of raising TypeError. The drop is warned about,
+    not silent: a forward-compat load that loses knobs (and their tuned
+    values) should be observable in logs."""
     names = {f.name for f in dataclasses.fields(cls)}
+    dropped = sorted(set(d) - names)
+    if dropped:
+        warnings.warn(
+            f"index metadata has {cls.__name__} keys {dropped} unknown to "
+            f"this version — loading without them (their saved values are "
+            f"discarded)", stacklevel=2)
     return {k: v for k, v in d.items() if k in names}
 
 

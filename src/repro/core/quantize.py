@@ -400,6 +400,15 @@ def quant_variants(pq_m: int = 16) -> dict:
     }
 
 
+# The IVF-capable subset of the registry: build_ivf has explicit codecs
+# only for these — any other kind silently trains the default 8-bit PQ
+# fine stage, so an "ivf-sq" sweep row would really measure ivf-pq.
+# THE list the benchmarks derive their ivf-* rows from
+# (benchmarks/qps_recall.py); kbest-lint asserts it stays a subset of
+# types.QUANT_KINDS.
+IVF_QUANT_KINDS = ("pq", "pq4", "bin")
+
+
 def code_bytes_per_vector(idx) -> int:
     """Stored code bytes per database vector (the A4 memory axis), dtype-
     aware: pq/pq4/sq codes are uint8 (1 byte/element) but bin codes are

@@ -34,6 +34,25 @@ def gather_dist_ref(q: jnp.ndarray, db: jnp.ndarray, ids: jnp.ndarray,
     return jnp.where(ids >= 0, out, jnp.inf)
 
 
+def sq_gather_dist_ref(q: jnp.ndarray, codes: jnp.ndarray,
+                       scale: jnp.ndarray, zero: jnp.ndarray,
+                       ids: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(Q, d) queries, (n, d) u8 codes, (1, d) scale/zero, (Q, M) ids ->
+    (Q, M) distances against the affine-dequantized rows
+    (code * scale + zero). Invalid ids (< 0) produce +inf.
+    """
+    vecs = (codes[jnp.maximum(ids, 0)].astype(jnp.float32)
+            * scale.reshape(-1)[None, None, :]
+            + zero.reshape(-1)[None, None, :])
+    qf = q.astype(jnp.float32)
+    if metric == "l2":
+        diff = vecs - qf[:, None, :]
+        out = jnp.sum(diff * diff, axis=-1)
+    else:
+        out = -jnp.einsum("qmd,qd->qm", vecs, qf)
+    return jnp.where(ids >= 0, out, jnp.inf)
+
+
 def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray, ids: jnp.ndarray
                ) -> jnp.ndarray:
     """(Q, m, K) luts, (n, m) uint8 codes, (Q, B) ids -> (Q, B) ADC dists.
@@ -104,16 +123,8 @@ def fused_expand_sq_ref(q: jnp.ndarray, codes: jnp.ndarray,
                         scale: jnp.ndarray, zero: jnp.ndarray,
                         ids: jnp.ndarray, metric: str, L: int,
                         n_beam: int = 1):
-    """SQ twin: dequantize the gathered u8 rows, then fused_expand_ref."""
-    vecs = (codes[jnp.maximum(ids, 0)].astype(jnp.float32)
-            * scale.reshape(-1)[None, None, :]
-            + zero.reshape(-1)[None, None, :])
-    qf = q.astype(jnp.float32)
-    if metric == "l2":
-        diff = vecs - qf[:, None, :]
-        d = jnp.sum(diff * diff, axis=-1)
-    else:
-        d = -jnp.einsum("qmd,qd->qm", vecs, qf)
+    """SQ twin: sq_gather_dist_ref then the sorted-block epilogue."""
+    d = sq_gather_dist_ref(q, codes, scale, zero, ids, metric)
     return sorted_block_ref(d, ids, L, n_beam)
 
 

@@ -1,0 +1,4 @@
+def search(cfg):
+    # reads L directly and max_hops through the hops_bound property;
+    # phantom_knob is read nowhere -> dead knob
+    return cfg.L + cfg.hops_bound

@@ -1,0 +1,15 @@
+"""Seeded violation: phantom_knob is declared but never read anywhere."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    L: int = 64
+    max_hops: int = 0
+    phantom_knob: int = 0
+
+    @property
+    def hops_bound(self) -> int:
+        # property bridge: keeps max_hops live because hops_bound is
+        # read externally (search.py below)
+        return self.max_hops if self.max_hops > 0 else self.L

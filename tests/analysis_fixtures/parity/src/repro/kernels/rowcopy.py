@@ -1,0 +1,18 @@
+"""Seeded violation: a Pallas kernel with no ref.py oracle, no ops.py
+dispatch entry, and no parity test."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def rowcopy(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(x.shape[0],),
+        in_specs=[pl.BlockSpec((1, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,9 @@
+def quant_variants(pq_m=16):
+    # missing a variant for kind "zq"
+    return {
+        "full": dict(kind="none"),
+        "pq8": dict(kind="pq", pq_m=pq_m),
+    }
+
+
+IVF_QUANT_KINDS = ("pq",)

@@ -1,0 +1,5 @@
+"""Seeded violation: kind "zq" is registered here but wired nowhere —
+quant_variants misses it, no sidecar tokens are registered for it, and
+no preset constructs it."""
+
+QUANT_KINDS = ("none", "pq", "zq")

@@ -1,0 +1,3 @@
+# Seeded violation: a hand-enumerated quant-kind list instead of
+# deriving from quantize.quant_variants.
+QUANTS = ("none", "pq", "zq")

@@ -1,0 +1,19 @@
+"""Seeded violations: Python-level control flow on traced values inside
+a Pallas kernel body — an `if`, an `assert`, and a `float()` cast."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    v = x_ref[0, 0]
+    if v > 0:                    # traced-value branch
+        o_ref[0, 0] = v
+    assert v >= 0                # traced-value assert
+    o_ref[0, 1] = float(v)       # concretizing cast
+
+
+def bad_branch(x):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,18 @@
+"""Seeded violation: a (4096, 4096) f32 block is 64 MiB — double-buffered
+in and out blocks put ~256 MiB in VMEM against a 16 MiB budget."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def huge_tile(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((4096, 4096), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((4096, 4096), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,133 @@
+"""kbest-lint (DESIGN.md §15) pins both directions: the live tree passes
+every check, and each check demonstrably FIRES on its seeded-violation
+fixture (tests/analysis_fixtures/) — a lint that cannot fail is no lint.
+Plus unit coverage for the subtle bits: property-bridge liveness,
+is-None/shape-attr tracing exemptions, VMEM table coverage."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import CHECKS, default_root, run_all, run_check
+from repro.analysis import parity, registry, tracing, vmem
+from repro.analysis.common import Tree
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "analysis_fixtures"
+
+FIXTURE_FOR = {
+    "kernel_parity": "parity",
+    "registry": "registry",
+    "dead_knobs": "dead_knobs",
+    "tracing_safety": "tracing",
+    "vmem_budget": "vmem",
+}
+
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"})
+
+
+# ------------------------------------------------------------ clean tree
+def test_clean_tree_passes():
+    violations = run_all(ROOT)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_default_root_is_this_checkout():
+    assert default_root() == ROOT
+
+
+def test_cli_exit_zero_on_clean_tree():
+    r = _cli()
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 violation(s)" in r.stdout
+
+
+# --------------------------------------------------------- checks fire
+@pytest.mark.parametrize("check", sorted(CHECKS))
+def test_fixture_fires(check):
+    violations = run_check(check, FIXTURES / FIXTURE_FOR[check])
+    own = [v for v in violations if v.check == check]
+    assert own, f"{check} did not fire on its seeded fixture"
+
+
+@pytest.mark.parametrize("check", sorted(CHECKS))
+def test_cli_exit_nonzero_on_fixture(check):
+    r = _cli("--root", str(FIXTURES / FIXTURE_FOR[check]), "--check", check)
+    assert r.returncode == 1, r.stdout + r.stderr
+
+
+def test_fixture_messages_name_the_seeded_violation():
+    knob = run_check("dead_knobs", FIXTURES / "dead_knobs")
+    assert any("phantom_knob" in v.message for v in knob)
+    # the max_hops property bridge (hops_bound) keeps it live
+    assert not any("max_hops" in v.message for v in knob)
+
+    reg = run_check("registry", FIXTURES / "registry")
+    assert any("zq" in v.message for v in reg)
+    assert any("hand-enumerated" in v.message for v in reg)
+
+    tr = run_check("tracing_safety", FIXTURES / "tracing")
+    kinds = {m for v in tr for m in ("`if`", "`assert`", "`float()`")
+             if m in v.message}
+    assert kinds == {"`if`", "`assert`", "`float()`"}, tr
+
+
+# ----------------------------------------------------------- unit bits
+def test_parity_discovers_all_kernels():
+    kernels = {name for _, name, _ in parity.find_kernels(Tree(ROOT))}
+    # the ops.py dispatch surface IS the kernel surface
+    import repro.kernels.ops as ops
+    public_ops = {n for n in dir(ops)
+                  if not n.startswith("_") and callable(getattr(ops, n))
+                  and getattr(ops, n).__module__ == "repro.kernels.ops"}
+    assert kernels == public_ops
+    assert len(kernels) >= 14
+
+
+def test_registry_kinds_match_runtime():
+    from repro.analysis.common import assigned_tuple_of_strings
+    from repro.core.types import QUANT_KINDS
+    mod = Tree(ROOT).parse("src/repro/core/types.py")
+    assert assigned_tuple_of_strings(mod, "QUANT_KINDS") == QUANT_KINDS
+    assert set(QUANT_KINDS) == set(registry.KIND_SIDECARS)
+
+
+def test_vmem_report_covers_every_kernel():
+    tree = Tree(ROOT)
+    estimates = vmem.estimate(tree)
+    assert {e.name for e in estimates} == \
+        {name for _, name, _ in parity.find_kernels(tree)}
+    for e in estimates:
+        assert e.notes == [], f"{e.name}: unresolved dims {e.notes}"
+        assert e.n_blocks > 0
+        assert 0 < e.total_bytes <= vmem.DEFAULT_BUDGET
+    table = vmem.report(tree)
+    assert "batch_dist" in table and "scratch" in table
+
+
+def test_tracing_exemptions_hold_on_live_tree():
+    """search()'s `is None` branches and the wrappers' shape asserts must
+    not be flagged — the exemptions are what makes the check adoptable."""
+    assert run_check("tracing_safety", ROOT) == []
+
+
+def test_tracing_taint_propagates_through_assignment():
+    import ast
+    from repro.analysis.tracing import _Taint
+    fn = ast.parse("def k(x_ref, o_ref):\n"
+                   "    v = x_ref[0] * 2\n"
+                   "    w = v + 1\n").body[0]
+    t = _Taint({"x_ref", "o_ref"})
+    t.propagate(fn)
+    assert {"v", "w"} <= t.names
+    # static facts cut the taint
+    fn2 = ast.parse("def k(x_ref):\n    n = x_ref.shape\n").body[0]
+    t2 = _Taint({"x_ref"})
+    t2.propagate(fn2)
+    assert "n" not in t2.names

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quantize as qz
 from repro.core import queue as qmod
 from repro.core import search as search_mod
 from repro.core.index import KBest, _widen, _widen_bin
@@ -16,7 +17,11 @@ from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
                               QuantConfig, SearchConfig)
 from repro.data.vectors import make_dataset
 
-QUANTS = ("none", "pq", "pq4", "sq", "bin")
+# Every registered quant kind (derived from THE registry so a new kind
+# lands in the beam parity sweep automatically — kbest-lint flags
+# hand-enumerated kind lists).
+QUANTS = tuple(dict.fromkeys(
+    kw["kind"] for kw in qz.quant_variants().values()))
 
 
 # --------------------------------------------------------------------------

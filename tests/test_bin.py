@@ -183,38 +183,8 @@ def test_bin_code_bytes_32x_under_f32(deep_ds):
     assert qz.code_bytes_per_vector(idx) * 32 == 4 * ((d + 31) // 32 * 32)
 
 
-# ---------------------------------------------------------------- save/load
-def test_bin_save_load_roundtrip_graph(tmp_path, deep_ds):
-    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric)
-    idx = KBest(cfg).add(deep_ds.base)
-    d1, i1 = idx.search(deep_ds.queries[:10], k=10)
-    path = str(tmp_path / "bin_graph.npz")
-    idx.save(path)
-    z = np.load(path)
-    assert "bin_rot" in z and "bin_codes" in z    # the §14 sidecars
-    assert z["bin_codes"].dtype == np.uint32
-    idx2 = KBest.load(path)
-    assert idx2.config.quant.kind == "bin"
-    np.testing.assert_array_equal(np.asarray(idx.bin_codes),
-                                  np.asarray(idx2.bin_codes))
-    d2, i2 = idx2.search(deep_ds.queries[:10], k=10)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
-
-
-def test_bin_save_load_roundtrip_ivf(tmp_path, deep_ds):
-    cfg = _ivf_cfg(deep_ds.base.shape[1], deep_ds.metric)
-    idx = KBest(cfg).add(deep_ds.base)
-    d1, i1 = idx.search(deep_ds.queries[:10], k=10)
-    path = str(tmp_path / "bin_ivf.npz")
-    idx.save(path)
-    z = np.load(path)
-    assert "ivf_bin_rot" in z and "ivf_codebooks" not in z
-    idx2 = KBest.load(path)
-    assert idx2.ivf.bin is not None and idx2.ivf.pq is None
-    d2, i2 = idx2.search(deep_ds.queries[:10], k=10)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+# save/load round-trips live in tests/test_saveload.py, parameterized
+# over the whole quant registry (bin included, graph + IVF).
 
 
 # ------------------------------------------------------------------ sharded

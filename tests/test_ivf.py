@@ -128,15 +128,5 @@ def test_ivf_kernel_impl_matches_ref_impl(bigann_ds):
     np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
 
 
-# ---------------------------------------------------------------- save/load
-def test_ivf_save_load_roundtrip(tmp_path, bigann_ds):
-    cfg = _ivf_cfg(128, "l2", nlist=32, L=64, nprobe=8, list_pad=8)
-    idx = KBest(cfg).add(bigann_ds.base)
-    d1, i1 = idx.search(bigann_ds.queries[:10], k=10)
-    path = str(tmp_path / "ivf_index.npz")
-    idx.save(path)
-    idx2 = KBest.load(path)
-    assert idx2.config.index_type == "ivf"
-    d2, i2 = idx2.search(bigann_ds.queries[:10], k=10)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+# save/load round-trips live in tests/test_saveload.py, parameterized
+# over the whole quant registry (graph + IVF x every IVF-capable kind).

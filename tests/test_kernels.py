@@ -58,6 +58,24 @@ def test_gather_dist_all_invalid():
     assert np.all(np.isinf(out))
 
 
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("q,m,n,d", [
+    (4, 8, 100, 32),
+    (9, 33, 257, 96),    # unaligned everything
+])
+def test_sq_gather_dist(metric, q, m, n, d):
+    qv = _arr(q, d)
+    codes = jnp.asarray(RNG.integers(0, 256, size=(n, d)).astype(np.uint8))
+    scale = jnp.asarray((RNG.random(d) * 0.1 + 1e-3).astype(np.float32))
+    zero = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(-1, n, size=(q, m)).astype(np.int32))
+    out = ops.sq_gather_dist(qv, codes, scale, zero, ids, metric=metric)
+    exp = ref.sq_gather_dist_ref(qv, codes, scale.reshape(1, -1),
+                                 zero.reshape(1, -1), ids, metric)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=3e-5, atol=3e-4)
+
+
 @pytest.mark.parametrize("q,b,n,m", [(2, 9, 64, 4), (5, 17, 200, 16)])
 def test_pq_adc(q, b, n, m):
     lut = _arr(q, m, 256)

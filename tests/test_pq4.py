@@ -179,38 +179,8 @@ def test_code_bytes_exactly_half_of_pq8_at_equal_m(deep_ds):
     assert s4.list_codes.shape[-1] * 2 == s8.list_codes.shape[-1] == m
 
 
-# ---------------------------------------------------------------- save/load
-def test_pq4_save_load_roundtrip_graph(tmp_path, deep_ds):
-    cfg = _graph_cfg(deep_ds.base.shape[1], deep_ds.metric, pq_m=16,
-                     pq4_lut_u8=True)
-    idx = KBest(cfg).add(deep_ds.base)
-    d1, i1 = idx.search(deep_ds.queries[:10], k=10)
-    path = str(tmp_path / "pq4_graph.npz")
-    idx.save(path)
-    idx2 = KBest.load(path)
-    assert idx2.config.quant.kind == "pq4" and idx2.config.quant.pq4_lut_u8
-    assert idx2.pq.codebooks.shape[1] == 16
-    assert idx2.pq_codes.shape == idx.pq_codes.shape
-    d2, i2 = idx2.search(deep_ds.queries[:10], k=10)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
-
-
-def test_pq4_save_load_roundtrip_ivf(tmp_path, bigann_ds):
-    cfg = IndexConfig(
-        dim=128, metric="l2", index_type="ivf",
-        ivf=IVFConfig(nlist=32, kmeans_iters=5, list_pad=8),
-        quant=QuantConfig(kind="pq4", pq_m=16, kmeans_iters=5),
-        search=SearchConfig(L=64, k=10, nprobe=8))
-    idx = KBest(cfg).add(bigann_ds.base)
-    d1, i1 = idx.search(bigann_ds.queries[:10], k=10)
-    path = str(tmp_path / "pq4_ivf.npz")
-    idx.save(path)
-    idx2 = KBest.load(path)
-    assert idx2.ivf.packed and idx2.ivf.pq.codebooks.shape[1] == 16
-    d2, i2 = idx2.search(bigann_ds.queries[:10], k=10)
-    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+# save/load round-trips live in tests/test_saveload.py, parameterized
+# over the whole quant registry (pq4 included, graph + IVF).
 
 
 # ------------------------------------------------------------------- recall

@@ -1,0 +1,100 @@
+"""Save/load round-trips parameterized over THE quant registry
+(quantize.quant_variants x graph, quantize.IVF_QUANT_KINDS x IVF) —
+replaces the per-kind hand-written round-trip tests, so a kind added to
+the registry is round-trip-tested automatically (kbest-lint enforces the
+registry side). Also pins the forward-compat warning: _config_from_dict
+must name the keys it drops instead of silently losing knobs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import quantize as qz
+from repro.core.index import KBest, _config_from_dict, _config_to_dict
+from repro.core.types import (BuildConfig, IVFConfig, IndexConfig,
+                              QuantConfig, SearchConfig)
+from repro.data.vectors import make_dataset
+
+PQ_M = 16
+VARIANTS = qz.quant_variants(pq_m=PQ_M)
+
+# Arrays each kind must persist (graph / IVF side) — asserted against the
+# saved npz so a save() regression shows up as a missing array, not just
+# as drifted search results.
+_GRAPH_ARRAYS = {"pq": ("pq_codebooks", "pq_codes"),
+                 "pq4": ("pq_codebooks", "pq_codes"),
+                 "sq": ("sq_scale", "sq_zero", "sq_codes"),
+                 "bin": ("bin_rot", "bin_codes")}
+_IVF_ARRAYS = {"pq": ("ivf_codebooks",), "pq4": ("ivf_codebooks",),
+               "bin": ("ivf_bin_rot",)}
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("bigann_like", n=500, n_queries=10, k=10)
+
+
+def _roundtrip(idx, ds, tmp_path, name):
+    d1, i1 = idx.search(ds.queries, k=10)
+    path = tmp_path / name
+    idx.save(str(path))
+    assert path.with_name(path.name + ".json").exists()   # per-name sidecar
+    idx2 = KBest.load(str(path))
+    assert idx2.config == idx.config
+    d2, i2 = idx2.search(ds.queries, k=10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    return path
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_graph_roundtrip(tmp_path, ds, variant):
+    cfg = IndexConfig(
+        dim=ds.base.shape[1], metric=ds.metric,
+        build=BuildConfig(M=16, knn_k=24, builder="brute", refine_iters=0),
+        quant=QuantConfig(kmeans_iters=4, **VARIANTS[variant]),
+        search=SearchConfig(L=48, k=10, early_term=False))
+    idx = KBest(cfg).add(ds.base)
+    path = _roundtrip(idx, ds, tmp_path, f"graph_{variant}.npz".replace(
+        "+", "_"))
+    kind = VARIANTS[variant]["kind"]
+    with np.load(path) as z:
+        for key in _GRAPH_ARRAYS.get(kind, ()):
+            assert key in z, f"save() lost '{key}' for kind '{kind}'"
+
+
+@pytest.mark.parametrize("kind", qz.IVF_QUANT_KINDS)
+def test_ivf_roundtrip(tmp_path, ds, kind):
+    cfg = IndexConfig(
+        dim=ds.base.shape[1], metric=ds.metric, index_type="ivf",
+        ivf=IVFConfig(nlist=16, kmeans_iters=4, list_pad=8),
+        quant=QuantConfig(kind=kind, pq_m=PQ_M, kmeans_iters=4),
+        search=SearchConfig(L=48, k=10, nprobe=8, rescore_factor=4))
+    idx = KBest(cfg).add(ds.base)
+    path = _roundtrip(idx, ds, tmp_path, f"ivf_{kind}.npz")
+    with np.load(path) as z:
+        for key in _IVF_ARRAYS[kind]:
+            assert key in z, f"save() lost '{key}' for IVF kind '{kind}'"
+        # the bin IVF codec must not drag a vestigial PQ stage along
+        if kind == "bin":
+            assert "ivf_codebooks" not in z
+
+
+def test_config_from_dict_warns_on_dropped_keys():
+    d = _config_to_dict(IndexConfig(dim=32, metric="l2"))
+    d["search"]["knob_from_the_future"] = 7
+    d["quant"]["other_new_knob"] = "x"
+    with pytest.warns(UserWarning) as rec:
+        cfg = _config_from_dict(d)
+    msgs = "\n".join(str(w.message) for w in rec)
+    assert "knob_from_the_future" in msgs and "SearchConfig" in msgs
+    assert "other_new_knob" in msgs and "QuantConfig" in msgs
+    assert cfg.search.L == IndexConfig(dim=32, metric="l2").search.L
+
+
+def test_config_from_dict_quiet_on_known_keys():
+    import warnings as w
+    d = _config_to_dict(IndexConfig(dim=32, metric="l2"))
+    with w.catch_warnings():
+        w.simplefilter("error")
+        _config_from_dict(d)
