@@ -1,106 +1,256 @@
-"""Roofline analysis (deliverable g) from the dry-run artifacts.
+"""Roofline + cost-model validation against the REAL kernels
+(DESIGN.md §16). Replaces the dead seed version that read LM dry-run
+artifacts from a nonexistent experiments/dryrun/.
 
-Per (arch x shape) on the single-pod mesh (256 chips), derive the three
-terms (seconds/step/device; artifacts carry PER-DEVICE numbers from the
-partitioned HLO, so "X_total/(chips*rate)" algebraically equals
-"X_per_device/rate"):
+Three parts, all on live 5k runs:
 
-  compute    = HLO_FLOPs_dev / 197e12      (v5e bf16 peak per chip)
-  memory     = HLO_bytes_dev / 819e9       (HBM bandwidth)
-  collective = coll_bytes_dev / 50e9       (ICI per-link)
+  1. n_dist validation — the static model's closed-form distance-count
+     terms vs measured SearchStats.n_dist:
+       - ivf/pq8: EXACT per-query equality. Predicted = valid codes in
+         the probed lists (from the built index + probe assignment —
+         ivf.scanned_counts, NOT search stats, so the check is
+         non-circular) + the rerank term min(r, width, scanned).
+       - graph/full + graph/pq8: the seed term (n_entries) + rerank
+         term decomposition must close with 0 <= traversal <= hops*M
+         per query (catches the seed-undercount bug class).
+       - graph/pq8 rerank delta: two searches differing ONLY in
+         QuantConfig.rerank share an identical traversal, so measured
+         n_dist deltas must equal the model's term delta EXACTLY
+         (catches the rerank-undercount class, zero profiling).
+  2. cost ordering — predicted seconds (max(flops/PEAK, bytes/BW)) over
+     an 8-config (nprobe x L) IVF sweep vs measured wall time; the
+     smoke lane asserts Spearman >= 0.8. Absolute seconds are never
+     asserted (interpret-mode CPU JAX is not a Kunpeng socket); the
+     model's job is ORDERING, which is what the tuner prunes with.
+  3. roofline table — compute/memory terms, dominant side, arithmetic
+     intensity per swept config.
 
-Also: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (serve) from
-launch/specs.py meta, the MODEL/HLO usefulness ratio, the dominant term,
-and a one-line improvement note. Output: markdown table (stdout) + the
-machine-readable experiments/roofline.json.
+    PYTHONPATH=src python -m benchmarks.roofline                  # report
+    PYTHONPATH=src python -m benchmarks.roofline --smoke \
+        --out BENCH_cost_smoke.json                               # CI lane
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import json
-from pathlib import Path
+import time
 
-PEAK_FLOPS = 197e12     # bf16 / chip
-HBM_BW = 819e9          # bytes/s / chip
-LINK_BW = 50e9          # bytes/s / link
+import numpy as np
 
-ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline.json"
+from repro.analysis import cost
+from repro.core import ivf as ivf_mod
+from repro.core.index import KBest, prep_queries
+from repro.core.types import QuantConfig
+from repro.configs import kbest as kcfg
+from repro.data.vectors import make_dataset, recall_at_k
 
-NOTES = {
-    "compute": "raise MXU utilization: larger per-device tiles, fuse "
-               "pointwise ops, drop fp32 logits",
-    "memory": "cut HBM traffic: flash/chunked attention, masked-position "
-              "loss, bf16 intermediates, better remat policy",
-    "collective": "reshard to kill resharding collectives: EP-aligned "
-                  "token layout, overlap all-to-all with expert GEMMs",
-}
+SPEARMAN_FLOOR = 0.8
+SWEEP_NPROBE = (2, 8, 32, 64)
+SWEEP_L = (64, 256)
+RERANK_A, RERANK_B = 24, 48
 
 
-def analyze(mesh: str = "pod16x16"):
+def spearman(a, b) -> float:
+    """Rank correlation without scipy (ordinal ranks; the sweep has no
+    ties by construction)."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    return float((ra * rb).sum() / denom) if denom else 0.0
+
+
+def _timed_search(idx, queries, scfg, reps: int = 3) -> float:
+    """min-of-reps wall seconds for one full search batch; warms with the
+    EXACT timed call shape first (jit keys on shapes + config)."""
+    np.asarray(idx.search(queries, search_cfg=scfg)[0])
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        d, _ = idx.search(queries, search_cfg=scfg)
+        np.asarray(d)          # block until the result is materialized
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ----------------------------------------------------- n_dist validation
+
+def check_ivf_exact(idx, queries, n: int) -> dict:
+    """Predicted n_dist (scanned + rerank closed forms) == measured,
+    per query."""
+    scfg = idx.config.search
+    w = cost.workload_from(idx.config, n=n, Q=len(queries))
+    state = idx.ivf
+    metric = "ip" if idx.config.metric == "cosine" else idx.config.metric
+    q = prep_queries(idx.config, queries)
+    probes = ivf_mod.select_probes(state, q, scfg.nprobe, metric)
+    scanned = np.asarray(ivf_mod.scanned_counts(state, probes))
+    predicted = np.array([cost.ivf_n_dist_exact(w, int(s),
+                                                nlist=state.nlist,
+                                                max_len=state.max_len)
+                          for s in scanned])
+    _, _, stats = idx.search(queries, with_stats=True)
+    measured = np.asarray(stats.n_dist)
+    return {"name": "ivf_pq8_exact",
+            "n_queries": len(queries),
+            "n_mismatch": int((predicted != measured).sum()),
+            "predicted_mean": float(predicted.mean()),
+            "measured_mean": float(measured.mean())}
+
+
+def check_graph_decomposition(idx, queries, n: int, label: str) -> dict:
+    """seed + traversal + rerank must close with 0 <= traversal <=
+    hops*M per query."""
+    w = cost.workload_from(idx.config, n=n, Q=len(queries))
+    _, _, stats = idx.search(queries, with_stats=True)
+    nd = np.asarray(stats.n_dist)
+    hops = np.asarray(stats.n_hops)
+    seed = w.n_entries
+    rerank = cost.graph_rerank_depth(w)
+    traversal = nd - seed - rerank
+    return {"name": label,
+            "n_queries": len(queries),
+            "seed_term": seed, "rerank_term": rerank,
+            "n_traversal_negative": int((traversal < 0).sum()),
+            "n_traversal_over_bound": int((traversal > hops * w.M).sum()),
+            "traversal_mean": float(traversal.mean()),
+            "measured_mean": float(nd.mean())}
+
+
+def check_rerank_delta(idx_a, idx_b, queries, n: int) -> dict:
+    """Identical traversal, rerank depths a vs b: measured per-query
+    n_dist delta must equal the model's rerank-term delta exactly."""
+    wa = cost.workload_from(idx_a.config, n=n, Q=len(queries))
+    wb = cost.workload_from(idx_b.config, n=n, Q=len(queries))
+    model_delta = cost.graph_rerank_depth(wb) - cost.graph_rerank_depth(wa)
+    _, _, sa = idx_a.search(queries, with_stats=True)
+    _, _, sb = idx_b.search(queries, with_stats=True)
+    delta = np.asarray(sb.n_dist) - np.asarray(sa.n_dist)
+    return {"name": "graph_pq8_rerank_delta",
+            "rerank_a": RERANK_A, "rerank_b": RERANK_B,
+            "model_delta": model_delta,
+            "n_mismatch": int((delta != model_delta).sum()),
+            "measured_delta_mean": float(delta.mean())}
+
+
+# ------------------------------------------------------ ordering + table
+
+def sweep(idx, ds, n: int, k: int) -> list:
+    """(nprobe x L) IVF sweep: predicted roofline terms vs measured
+    wall time."""
+    state = idx.ivf
     rows = []
-    for f in sorted(ART.glob(f"*__{mesh}.json")):
-        r = json.loads(f.read_text())
-        ce = r.get("cost_extrapolated") or {}
-        if "flops" not in ce:
-            ce = {"flops": r["cost_analysis"].get("flops", 0.0),
-                  "bytes": r["cost_analysis"].get("bytes accessed", 0.0),
-                  "coll_bytes": r["collectives"]["total_bytes"],
-                  "method": "raw"}
-        t_c = ce["flops"] / PEAK_FLOPS
-        t_m = ce["bytes"] / HBM_BW
-        t_x = ce["coll_bytes"] / LINK_BW
-        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
-        dom = max(terms, key=terms.get)
-        bound = max(t_c, t_m, t_x)
-        mf_dev = r["meta"]["model_flops"] / r["devices"]
-        useful = mf_dev / ce["flops"] if ce["flops"] else 0.0
-        # roofline fraction: useful model flops per second at the bound,
-        # relative to peak — the score §Perf iterates on.
-        frac = (mf_dev / bound) / PEAK_FLOPS if bound > 0 else 0.0
-        rows.append({
-            "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
-            "mesh": mesh,
-            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
-            "dominant": dom,
-            "model_flops_dev": mf_dev,
-            "hlo_flops_dev": ce["flops"],
-            "useful_ratio": useful,
-            "roofline_fraction": frac,
-            "temp_bytes_dev": r["memory_analysis"]["temp_bytes"],
-            "note": NOTES[dom],
-            "method": ce.get("method", "?"),
-        })
+    for nprobe in SWEEP_NPROBE:
+        for L in SWEEP_L:
+            scfg = dataclasses.replace(idx.config.search, nprobe=nprobe,
+                                       L=L)
+            w = cost.workload_from(idx.config, search=scfg, n=n,
+                                   Q=len(ds.queries))
+            qc = cost.ivf_search_cost(w, nlist=state.nlist,
+                                      max_len=state.max_len)
+            wall = _timed_search(idx, ds.queries, scfg)
+            _, ids = idx.search(ds.queries, search_cfg=scfg)
+            rows.append({
+                "nprobe": nprobe, "L": L,
+                "pred_s": qc.seconds,
+                "t_compute": qc.t_compute, "t_memory": qc.t_memory,
+                "dominant": qc.dominant,
+                "intensity": qc.flops / qc.hbm_bytes,
+                "pred_us_per_q": qc.us_per_query,
+                "wall_s": wall,
+                "wall_us_per_q": wall / len(ds.queries) * 1e6,
+                "recall": recall_at_k(np.asarray(ids), ds.gt_ids, k)})
     return rows
 
 
 def render(rows) -> str:
-    hdr = ("| arch | shape | dom | compute s | memory s | coll s | "
-           "MODEL/HLO | roofline frac | temp GiB |\n"
-           "|---|---|---|---|---|---|---|---|---|\n")
-    out = [hdr]
+    out = [f"{'nprobe':>6} {'L':>4} {'pred us/q':>10} {'wall us/q':>10} "
+           f"{'F/B':>6} {'bound':>7} {'recall':>7}"]
     for r in rows:
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['dominant'][:4]} "
-            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
-            f"| {r['t_collective_s']:.3e} | {r['useful_ratio']:.2f} "
-            f"| {r['roofline_fraction']:.3f} "
-            f"| {r['temp_bytes_dev']/2**30:.1f} |\n")
-    return "".join(out)
+        out.append(f"{r['nprobe']:>6} {r['L']:>4} "
+                   f"{r['pred_us_per_q']:>10.1f} "
+                   f"{r['wall_us_per_q']:>10.1f} {r['intensity']:>6.1f} "
+                   f"{r['dominant']:>7} {r['recall']:>7.3f}")
+    return "\n".join(out)
 
 
-def main():
-    rows = analyze()
-    OUT.write_text(json.dumps(rows, indent=1))
+def main(quick: bool = False, smoke: bool = False,
+         out: str = "BENCH_roofline.json") -> dict:
+    n, n_queries, k = 5_000, 100, 10
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=k)
+
+    # --- builds: ivf/pq8 preset, graph/full preset, graph/pq8 pair ----
+    ivf_cfg = kcfg.ivf_index_config("deep_like")
+    idx_ivf = KBest(ivf_cfg).add(ds.base)
+
+    g_cfg = kcfg.index_config("deep_like")
+    idx_full = KBest(g_cfg).add(ds.base)
+
+    pq_cfg = dataclasses.replace(
+        g_cfg, quant=QuantConfig(kind="pq", pq_m=16, kmeans_iters=6,
+                                 rerank=RERANK_A))
+    idx_pq = KBest(pq_cfg)
+    idx_pq.db, idx_pq.graph, idx_pq.entry, idx_pq.order = (
+        idx_full.db, idx_full.graph, idx_full.entry, idx_full.order)
+    idx_pq._train_quant(idx_pq.db)
+    # rerank sibling: SAME graph + SAME trained codebooks/codes, only the
+    # exact-rerank depth differs => traversal identical by construction
+    idx_pq2 = KBest(dataclasses.replace(
+        pq_cfg, quant=dataclasses.replace(pq_cfg.quant, rerank=RERANK_B)))
+    idx_pq2.db, idx_pq2.graph, idx_pq2.entry, idx_pq2.order = (
+        idx_pq.db, idx_pq.graph, idx_pq.entry, idx_pq.order)
+    idx_pq2.pq, idx_pq2.pq_codes = idx_pq.pq, idx_pq.pq_codes
+
+    # --- part 1: n_dist validation -----------------------------------
+    checks = [
+        check_ivf_exact(idx_ivf, ds.queries, n),
+        check_graph_decomposition(idx_full, ds.queries, n, "graph_full"),
+        check_graph_decomposition(idx_pq, ds.queries, n, "graph_pq8"),
+        check_rerank_delta(idx_pq, idx_pq2, ds.queries, n),
+    ]
+    for c in checks:
+        bad = sum(v for kk, v in c.items() if kk.startswith("n_mismatch")
+                  or kk.startswith("n_traversal"))
+        print(f"[{c['name']}] {'OK' if bad == 0 else f'{bad} FAIL'} "
+              f"({ {kk: v for kk, v in c.items() if kk != 'name'} })")
+
+    # --- parts 2+3: cost ordering + roofline table -------------------
+    rows = sweep(idx_ivf, ds, n, k)
+    rho = spearman([r["pred_s"] for r in rows],
+                   [r["wall_s"] for r in rows])
+    print()
     print(render(rows))
-    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
-    print("\nworst roofline fractions:")
-    for r in worst:
-        print(f"  {r['arch']:24s} {r['shape']:14s} frac={r['roofline_fraction']:.4f} dom={r['dominant']}")
-    collb = sorted(rows, key=lambda r: -r["t_collective_s"])[:5]
-    print("most collective-bound:")
-    for r in collb:
-        print(f"  {r['arch']:24s} {r['shape']:14s} t_coll={r['t_collective_s']:.3f}s")
+    print(f"\nspearman(predicted cost, measured wall) over {len(rows)} "
+          f"configs: {rho:.3f}")
+
+    report = {"n": n, "n_queries": n_queries, "dataset": "deep_like",
+              "constants": {"peak_flops": cost.PEAK_FLOPS,
+                            "mem_bw": cost.MEM_BW},
+              "checks": checks, "sweep": rows, "spearman": rho}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out}")
+
+    if smoke:
+        for c in checks:
+            for kk, v in c.items():
+                if kk.startswith(("n_mismatch", "n_traversal")):
+                    assert v == 0, f"{c['name']}.{kk} = {v} (want 0)"
+        assert rho >= SPEARMAN_FLOOR, \
+            f"cost-ordering Spearman {rho:.3f} < {SPEARMAN_FLOOR}"
+        print(f"smoke OK: n_dist terms exact, ordering rho={rho:.3f} >= "
+              f"{SPEARMAN_FLOOR}")
+    return report
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="hard-assert exact n_dist + Spearman floor")
+    ap.add_argument("--out", default="BENCH_roofline.json")
+    args = ap.parse_args()
+    main(quick=args.quick, smoke=args.smoke, out=args.out)

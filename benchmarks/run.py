@@ -14,8 +14,9 @@ Sections:
                 serving engine (shape-bucketed compile cache, DESIGN.md §11)
   [traverse]    beyond-paper — beam-width sweep of the lockstep traversal
                 (iterations / dists / recall vs W, DESIGN.md §2)
-  [roofline]    beyond-paper — per (arch x shape) roofline terms from the
-                dry-run artifacts (requires launch/dryrun.py artifacts)
+  [roofline]    beyond-paper — cost-model validation on live 5k runs:
+                exact n_dist checks + predicted-vs-measured cost ordering
+                + roofline table (DESIGN.md §16; writes BENCH_roofline.json)
 
 Each section prints `name,us_per_call,derived` style CSV rows.
 """
@@ -36,10 +37,18 @@ def main() -> None:
                     help="run ONLY the bin CI lane (recall >= 0.85 at "
                          ">= 8x byte reduction vs per-dim pq8; writes "
                          "BENCH_bin_smoke.json — artifact-only)")
+    ap.add_argument("--cost-smoke", action="store_true",
+                    help="run ONLY the cost-model CI lane (exact n_dist "
+                         "equality + Spearman >= 0.8 cost ordering at 5k; "
+                         "writes BENCH_cost_smoke.json — artifact-only)")
     args, _ = ap.parse_known_args()
     if args.bin_smoke:
         from benchmarks import qps_recall
         qps_recall.bin_smoke()
+        return
+    if args.cost_smoke:
+        from benchmarks import roofline
+        roofline.main(smoke=True, out="BENCH_cost_smoke.json")
         return
     want = (args.sections.split(",") if args.sections != "all"
             else ["qps_recall", "ablation", "scaling", "serving",
@@ -71,7 +80,9 @@ def main() -> None:
                                    else "BENCH_traverse.json"))
             elif name == "roofline":
                 from benchmarks import roofline
-                roofline.main()
+                # BENCH_roofline.json is the full-report output; --quick
+                # keeps the same 5k size (the bench IS the validation)
+                roofline.main(quick=args.quick)
             print(f"[{name}] done in {time.time()-t0:.1f}s")
         except Exception as e:
             traceback.print_exc()

@@ -1,7 +1,7 @@
 """kbest-lint: AST-based invariant checks over the KBest tree
 (DESIGN.md §15).
 
-Five checks, each a module with `run(tree) -> List[Violation]`:
+Seven checks, each a module with `run(tree) -> List[Violation]`:
 
   kernel_parity   every Pallas kernel has a jnp oracle, an ops.py
                   dispatch entry, and a kernel-vs-ref parity test
@@ -11,6 +11,9 @@ Five checks, each a module with `run(tree) -> List[Violation]`:
   tracing_safety  no Python control flow on traced values in kernel
                   bodies / jit entry points
   vmem_budget     per-kernel BlockSpec+scratch residency under budget
+  docs_xref       DESIGN.md §-citations resolve, sections contiguous
+  cost            every kernel has a resolvable closed-form cost model
+                  (FLOPs / HBM bytes / dists — DESIGN.md §16)
 
 Pure stdlib (`ast` only) — runs without jax installed, and runs on
 deliberately-broken fixture trees. CLI: `python -m repro.analysis`.
@@ -18,7 +21,8 @@ deliberately-broken fixture trees. CLI: `python -m repro.analysis`.
 from pathlib import Path
 from typing import Dict, List
 
-from repro.analysis import knobs, parity, registry, tracing, vmem
+from repro.analysis import cost, docs, knobs, parity, registry, tracing, \
+    vmem
 from repro.analysis.common import Tree, Violation
 
 CHECKS = {
@@ -27,6 +31,8 @@ CHECKS = {
     knobs.CHECK: knobs.run,
     tracing.CHECK: tracing.run,
     vmem.CHECK: vmem.run,
+    docs.CHECK: docs.run,
+    cost.CHECK: cost.run,
 }
 
 

@@ -1,11 +1,14 @@
 """CLI for kbest-lint: `python -m repro.analysis [--report] [--check NAME]
-[--root PATH]`. Exits 0 iff the tree is violation-free."""
+[--root PATH] [--json PATH]`. Exits 0 iff the tree is violation-free."""
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import sys
 
-from repro.analysis import CHECKS, default_root, run_all, run_check, vmem
+from repro.analysis import CHECKS, cost, default_root, run_all, run_check, \
+    vmem
 from repro.analysis.common import Tree
 
 
@@ -13,19 +16,28 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="AST invariant checks for the KBest tree "
-                    "(DESIGN.md §15)")
+                    "(DESIGN.md §15/§16)")
     ap.add_argument("--check", choices=sorted(CHECKS),
-                    help="run a single check (default: all five)")
+                    help="run a single check (default: all seven)")
     ap.add_argument("--report", action="store_true",
-                    help="also print the per-kernel VMEM residency table")
+                    help="also print the per-kernel VMEM residency and "
+                         "cost-model tables")
     ap.add_argument("--root", default=None,
                     help="tree to check (default: this checkout)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write findings + the vmem/cost tables as JSON "
+                         "(the CI lint artifact)")
     args = ap.parse_args(argv)
 
     root = args.root if args.root is not None else default_root()
     if args.report:
-        print(vmem.report(Tree(root)))
-        print()
+        tree = Tree(root)
+        if args.check in (None, vmem.CHECK):
+            print(vmem.report(tree))
+            print()
+        if args.check in (None, cost.CHECK):
+            print(cost.report(tree))
+            print()
 
     violations = (run_check(args.check, root) if args.check
                   else run_all(root))
@@ -35,6 +47,20 @@ def main(argv=None) -> int:
     print(f"kbest-lint: {len(violations)} violation(s)"
           + (f" [{', '.join(names)}]" if names else "")
           + f" in {root}")
+
+    if args.json:
+        tree = Tree(root)
+        payload = {
+            "root": str(root),
+            "ok": not violations,
+            "violations": [dataclasses.asdict(v) for v in violations],
+            "vmem": [dataclasses.asdict(e) for e in vmem.estimate(tree)],
+            "cost": cost.cost_model(tree),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}")
+
     return 1 if violations else 0
 
 

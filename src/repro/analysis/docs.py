@@ -1,0 +1,78 @@
+"""Check 6 — DESIGN.md cross-reference integrity (docs_xref).
+
+Every `DESIGN.md §N` citation anywhere in the tree must resolve to a
+real `## §N` section header, and the numbered sections themselves must
+be contiguous from §1 — inserting a section (e.g. §12 "Sharded search",
+which shifted quantization to §13) forces every stale citation to fail
+the lint instead of silently pointing at the wrong architecture note.
+
+Grown out of tests/test_docs.py so the no-pip CI lint lane catches
+dangling references without running pytest; the pytest side now just
+delegates here.  Raw text scan (citations live in comments, docstrings
+and markdown — the AST never sees most of them), same file scope as the
+other checks: iter_py over the code trees + the top-level markdown
+files.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Set
+
+from repro.analysis.common import Tree, Violation, missing_file
+
+CHECK = "docs_xref"
+DESIGN = "DESIGN.md"
+
+CITATION = re.compile(r"DESIGN\.md §(\d+)")
+HEADER = re.compile(r"^## §(\d+)")
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+SCAN_FILES = ("README.md", "ROADMAP.md", "CHANGES.md")
+
+
+def sections_of(tree: Tree) -> Optional[Set[int]]:
+    """Numbered `## §N` headers of DESIGN.md; None when the file is
+    missing (fixture trees / pre-docs checkouts)."""
+    text = _read(tree, DESIGN)
+    if text is None:
+        return None
+    return {int(m.group(1)) for line in text.splitlines()
+            for m in [HEADER.match(line)] if m}
+
+
+def _read(tree: Tree, rel: str) -> Optional[str]:
+    try:
+        return (tree.root / rel).read_text()
+    except OSError:
+        return None
+
+
+def run(tree: Tree) -> List[Violation]:
+    secs = sections_of(tree)
+    if secs is None:
+        return [missing_file(CHECK, DESIGN, "section headers live here")]
+    violations: List[Violation] = []
+    if not secs:
+        violations.append(Violation(
+            CHECK, DESIGN, 1, "no numbered `## §N` sections found"))
+    elif secs != set(range(1, max(secs) + 1)):
+        missing = sorted(set(range(1, max(secs) + 1)) - secs)
+        violations.append(Violation(
+            CHECK, DESIGN, 1,
+            f"numbered sections must be contiguous from §1: "
+            f"§{', §'.join(str(s) for s in missing)} missing "
+            f"(present: {sorted(secs)})"))
+
+    scan = list(tree.iter_py(*SCAN_DIRS))
+    scan += [f for f in SCAN_FILES if tree.exists(f)]
+    for rel in scan:
+        src = _read(tree, rel)
+        if src is None:
+            continue
+        for lineno, line in enumerate(src.splitlines(), start=1):
+            for n in CITATION.findall(line):
+                if int(n) not in secs:
+                    violations.append(Violation(
+                        CHECK, rel, lineno,
+                        f"citation 'DESIGN.md §{n}' does not resolve to "
+                        f"any `## §{n}` header"))
+    return violations

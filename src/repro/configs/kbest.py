@@ -218,6 +218,19 @@ def smoke_config() -> IndexConfig:
         search=SearchConfig(L=16, k=5))
 
 
+def tune_grid(index_type: str) -> dict:
+    """Search-knob grid core/tune.py::tune_config sweeps (DESIGN.md §16).
+    Quant kinds are NOT enumerated here — the tuner takes them from the
+    registry (types.QUANT_KINDS / quantize.IVF_QUANT_KINDS), so a new
+    kind lands in the tuner automatically. rescore_factor only fans out
+    for kind="bin" (the only kind that reads it)."""
+    if index_type == "ivf":
+        return {"L": (32, 64, 128, 256), "nprobe": (4, 8, 16, 32, 64),
+                "rescore_factor": (8, 32)}
+    return {"L": (32, 64, 128, 256), "beam_width": (1, 4),
+            "rescore_factor": (8, 32)}
+
+
 def ivf_smoke_config() -> IndexConfig:
     return IndexConfig(
         dim=32, metric="l2", index_type="ivf",

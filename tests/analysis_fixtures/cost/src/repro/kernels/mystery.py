@@ -1,0 +1,18 @@
+"""Seeded violation for the cost check: a Pallas kernel with NO
+KERNEL_COSTS entry and a grid dimension (`zz`) the workload bindings
+cannot resolve — the cost model must refuse to silently skip it."""
+
+
+def _mystery_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def mystery_scan(x, zz):
+    import jax.experimental.pallas as pl
+    return pl.pallas_call(
+        _mystery_kernel,
+        grid=(zz, 4),
+        in_specs=[pl.BlockSpec((1, 4), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 4), lambda i, j: (i, j)),
+        out_shape=None,
+    )(x)

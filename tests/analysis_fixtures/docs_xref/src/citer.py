@@ -1,0 +1,4 @@
+"""Cites a section that does not exist in this tree's DESIGN.md
+(see DESIGN.md §9) — the dangling-citation rule fires here."""
+
+SECTION = 9

@@ -10,7 +10,7 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import CHECKS, default_root, run_all, run_check
-from repro.analysis import parity, registry, tracing, vmem
+from repro.analysis import cost, docs, parity, registry, tracing, vmem
 from repro.analysis.common import Tree
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -22,6 +22,8 @@ FIXTURE_FOR = {
     "dead_knobs": "dead_knobs",
     "tracing_safety": "tracing",
     "vmem_budget": "vmem",
+    "docs_xref": "docs_xref",
+    "cost": "cost",
 }
 
 
@@ -77,6 +79,14 @@ def test_fixture_messages_name_the_seeded_violation():
              if m in v.message}
     assert kinds == {"`if`", "`assert`", "`float()`"}, tr
 
+    co = run_check("cost", FIXTURES / "cost")
+    assert any("mystery_scan" in v.message for v in co)
+    assert any("zz" in v.message for v in co)  # the unresolvable grid dim
+
+    dx = run_check("docs_xref", FIXTURES / "docs_xref")
+    assert any("§3" in v.message for v in dx)       # numbering gap
+    assert any("§9" in v.message for v in dx)       # dangling citation
+
 
 # ----------------------------------------------------------- unit bits
 def test_parity_discovers_all_kernels():
@@ -115,6 +125,66 @@ def test_tracing_exemptions_hold_on_live_tree():
     """search()'s `is None` branches and the wrappers' shape asserts must
     not be flagged — the exemptions are what makes the check adoptable."""
     assert run_check("tracing_safety", ROOT) == []
+
+
+def test_cost_model_covers_every_kernel():
+    """KERNEL_COSTS and the AST estimate must cover exactly the
+    find_kernels surface, with every grid dim resolved (no notes)."""
+    tree = Tree(ROOT)
+    kernels = {name for _, name, _ in parity.find_kernels(tree)}
+    assert set(cost.KERNEL_COSTS) == kernels
+    ests = cost.estimate(tree)
+    assert {e.name for e in ests} == kernels
+    for e in ests:
+        assert e.notes == [], f"{e.name}: {e.notes}"
+        assert e.flops > 0 and e.hbm_bytes > 0, e.name
+
+
+def test_cost_model_orders_kernel_families():
+    """The closed forms must reproduce the orderings the kernels were
+    built for: pq4 ADC does 16x fewer MACs than pq8 (K=16 vs 256), and
+    sq moves ~4x fewer gather bytes than full-precision."""
+    w = cost.Workload()
+    pq8_f, _, _ = cost.kernel_cost("pq_adc", w)
+    pq4_f, _, _ = cost.kernel_cost("pq4_adc", w)
+    assert pq4_f < pq8_f
+    _, full_b, _ = cost.kernel_cost("gather_dist", w)
+    _, sq_b, _ = cost.kernel_cost("sq_gather_dist", w)
+    assert sq_b < full_b
+    # per-query composition: IVF cost strictly increases with nprobe
+    import dataclasses as dc
+    costs = [cost.ivf_search_cost(dc.replace(w, index_type="ivf",
+                                             nprobe=p)).seconds
+             for p in (4, 16, 64)]
+    assert costs == sorted(costs) and costs[0] < costs[-1]
+
+
+def test_ivf_n_dist_exact_arithmetic():
+    """n_dist = scanned + min(rerank_depth, cand_width, scanned) — the
+    closed form benchmarks/roofline.py asserts against live runs."""
+    w = cost.Workload(index_type="ivf", n=5000, k=10, L=128, nprobe=24,
+                      rerank=0)
+    nl, fill, ml, P, Lp, width = cost.ivf_geometry(w)
+    # pq with rerank=0 reranks the WHOLE merged candidate queue
+    r = cost.ivf_rerank_depth(w)
+    assert r == width
+    big = 10_000
+    assert cost.ivf_n_dist_exact(w, big) == big + min(r, width, big)
+    # fewer scanned codes than the rerank depth: rerank is capped by it
+    assert cost.ivf_n_dist_exact(w, 3) == 3 + min(r, width, 3) == 6
+
+
+def test_cli_json_payload(tmp_path):
+    out = tmp_path / "lint.json"
+    r = _cli("--json", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    import json
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is True and payload["violations"] == []
+    kernels = {name for _, name, _ in parity.find_kernels(Tree(ROOT))}
+    assert {row["name"] for row in payload["vmem"]} == kernels
+    assert {row["name"] for row in payload["cost"]["kernels"]} == kernels
+    assert payload["cost"]["queries"], "per-query cost table missing"
 
 
 def test_tracing_taint_propagates_through_assignment():

@@ -1,0 +1,121 @@
+"""Tuner coverage (DESIGN.md §16): the paper's ET dry-run procedure,
+the quant-kind sweep, and the model-guided full-knob tuner.
+
+The ET/memo tests stub `tune._eval` with a counting fake — the
+procedure's contract (admissibility floor, no duplicate measurements)
+is about WHICH configs get evaluated, not about search quality, so no
+index is built. The quant-kind and full-knob tests run real builds at
+sizes the 50k-build memory note rules IN (<= 5k)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import tune
+from repro.core.types import QUANT_KINDS, SearchConfig
+from repro.data.vectors import exact_topk, make_dataset
+
+
+# ----------------------------------------------------------- memoization
+
+def test_memo_eval_collapses_duplicate_configs(monkeypatch):
+    calls = []
+
+    def fake_eval(index, queries, gt_ids, scfg):
+        calls.append(scfg)
+        return 0.9, 10.0
+
+    monkeypatch.setattr(tune, "_eval", fake_eval)
+    ev = tune._memo_eval(None, None, None)
+    a = SearchConfig(L=64, k=10)
+    b = SearchConfig(L=64, k=10)          # equal frozen config, new object
+    c = SearchConfig(L=128, k=10)
+    assert ev(a) == ev(b) == (0.9, 10.0)
+    ev(c)
+    ev(a)
+    assert len(calls) == 2                # one per DISTINCT config
+    assert set(ev.cache) == {a, c}
+
+
+# ------------------------------------------------------- early-term stage
+
+def test_tune_early_term_floor_and_no_duplicate_measures(monkeypatch):
+    """The tuned config must be admissible (recall within slack of the
+    no-ET baseline) and cheaper; the memoized evaluator must never
+    measure the same config twice across the t_frac binary searches."""
+    calls = []
+
+    def fake_eval(index, queries, gt_ids, scfg):
+        calls.append(scfg)
+        if not scfg.early_term:
+            return 0.96, 100.0
+        # admissible once patience >= 8; cheaper at lower patience
+        rec = 0.96 if scfg.et_patience >= 8 else 0.50
+        return rec, 40.0 + scfg.et_patience
+    monkeypatch.setattr(tune, "_eval", fake_eval)
+
+    base = SearchConfig(L=64, k=10)
+    tuned = tune.tune_early_term(None, None, None, base,
+                                 recall_target=0.95)
+    assert tuned.early_term and tuned.et_patience == 8
+    # admissibility floor: the choice itself meets it
+    rec, hops = fake_eval(None, None, None, tuned)
+    assert rec >= min(0.95, 0.96) - 0.005
+    assert hops < 100.0
+    # memoized evaluator => every measured config is distinct
+    assert len(calls) == len(set(calls)) + 1   # +1: the re-check above
+
+
+# ------------------------------------------------------- quant-kind sweep
+
+def test_tune_quant_kind_covers_registry():
+    from repro.core import quantize as qz
+    from repro.core.index import KBest
+    from repro.configs import kbest as kcfg
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((400, 32)).astype(np.float32)
+    q = rng.standard_normal((16, 32)).astype(np.float32)
+    gt = exact_topk(x, q, k=5, metric="l2")
+    idx = KBest(kcfg.smoke_config()).add(x)
+
+    best, rows = tune.tune_quant_kind(idx, q, gt, recall_target=0.6,
+                                      pq_m=16)
+    variants = qz.quant_variants(pq_m=16)
+    assert {r["quant"] for r in rows} == set(variants)
+    assert best in variants
+    # the swept registry spans every registered kind
+    assert {v["kind"] for v in variants.values()} == set(QUANT_KINDS)
+
+
+# ------------------------------------------------- model-guided full tuner
+
+@pytest.fixture(scope="module")
+def tuned_ivf():
+    ds = make_dataset("deep_like", n=5_000, n_queries=200, k=10)
+    return tune.tune_config(ds.base, ds.queries, ds.gt_ids,
+                            metric=ds.metric, index_type="ivf", k=10,
+                            recall_slo=0.80)
+
+
+def test_tune_config_prunes_at_least_half_the_grid(tuned_ivf):
+    res = tuned_ivf
+    assert res.grid_size >= 12, "grid too small to exercise pruning"
+    assert res.n_measured <= res.grid_size // 2
+    assert res.n_pruned >= res.grid_size - res.grid_size // 2
+    assert res.n_measured == len(res.rows) > 0
+    # rows really are cheapest-first (model ordering drove measurement)
+    preds = [r["pred_us"] for r in res.rows]
+    assert preds == sorted(preds)
+
+
+def test_tune_config_meets_slo_on_holdout(tuned_ivf):
+    res = tuned_ivf
+    assert res.recall_tune >= res.recall_slo, res.notes
+    assert res.recall_holdout >= res.recall_slo, \
+        (res.recall_holdout, res.notes)
+    cfg = res.config
+    assert cfg.index_type == "ivf" and cfg.search.k == 10
+    # the emitted kind comes from the registry the tuner swept
+    from repro.core import quantize as qz
+    assert cfg.quant.kind in qz.IVF_QUANT_KINDS
