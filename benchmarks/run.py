@@ -41,6 +41,12 @@ def main() -> None:
                     help="run ONLY the cost-model CI lane (exact n_dist "
                          "equality + Spearman >= 0.8 cost ordering at 5k; "
                          "writes BENCH_cost_smoke.json — artifact-only)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="run ONLY the overload-serving CI lane (2x-"
+                         "saturation ramp: policy p99 under SLO + goodput "
+                         "over baseline + recall above ladder floor, plus "
+                         "the crash-point save/load matrix; writes "
+                         "BENCH_serving_smoke.json — artifact-only)")
     args, _ = ap.parse_known_args()
     if args.bin_smoke:
         from benchmarks import qps_recall
@@ -49,6 +55,10 @@ def main() -> None:
     if args.cost_smoke:
         from benchmarks import roofline
         roofline.main(smoke=True, out="BENCH_cost_smoke.json")
+        return
+    if args.serve_smoke:
+        from benchmarks import serving
+        serving.overload_main(smoke=True, out="BENCH_serving_smoke.json")
         return
     want = (args.sections.split(",") if args.sections != "all"
             else ["qps_recall", "ablation", "scaling", "serving",

@@ -1,4 +1,5 @@
-"""Serving benchmark — closed-loop and open-loop QPS through repro.serve.
+"""Serving benchmark — closed-loop, open-loop, and overload QPS through
+repro.serve.
 
 Beyond-paper section (the paper reports steady-state QPS only; a deployed
 service also cares about what variable-size traffic does to the compile
@@ -11,8 +12,18 @@ cache and the latency tail):
   open-loop   : Poisson arrivals at a target rate against a virtual clock
                 (single server). Measures queueing latency p50/p95/p99 —
                 the number a latency SLO actually binds on.
+  overload    : Poisson arrivals at 2x the measured saturation rate with a
+                deadline SLO on every request (DESIGN.md §17). Runs the
+                SAME traffic twice — no-policy baseline vs admission
+                control + degrade ladder + bounded queue — and asserts the
+                policy run holds served-sojourn p99 under the SLO, beats
+                the baseline's goodput (served-within-deadline QPS), and
+                keeps recall at or above the ladder's bottom-rung floor.
+                The crash-point save/load matrix (core/persist.py) rides
+                along. Writes git-tracked BENCH_serving.json (full) or
+                BENCH_serving_smoke.json (--serve-smoke lane).
 
-    PYTHONPATH=src python -m benchmarks.serving [--smoke]
+    PYTHONPATH=src python -m benchmarks.serving [--smoke] [--overload]
 
 --smoke runs a CI-sized corpus and HARD-FAILS (exit 1) if serving many
 batch sizes triggers more XLA traces than warmed shape buckets — the
@@ -22,6 +33,10 @@ anti-pattern the engine exists to prevent).
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -126,6 +141,240 @@ def open_loop(ds, engine, rate_qps: float, n_requests: int, seed: int = 0):
     return lat
 
 
+def _build_overload_engine(n: int, n_queries: int, quick: bool):
+    """Single IVF+PQ server for the overload ramp (fast to build, and the
+    family with the deepest degrade ladder)."""
+    from repro.configs import kbest as kcfg
+    from repro.core.index import KBest
+    from repro.data.vectors import make_dataset
+    from repro.serve import SearchEngine
+
+    ds = make_dataset("deep_like", n=n, n_queries=n_queries, k=10)
+    cfg = kcfg.ivf_index_config("deep_like")
+    cfg = dataclasses.replace(
+        cfg, dim=ds.base.shape[1],
+        ivf=dataclasses.replace(cfg.ivf, kmeans_iters=4 if quick else 8),
+        quant=dataclasses.replace(cfg.quant,
+                                  kmeans_iters=4 if quick else 8))
+    eng = SearchEngine(KBest(cfg).add(ds.base), min_bucket=8, max_bucket=32,
+                       name="default")
+    return ds, eng
+
+
+def _calibrate(ds, eng, ladder, batch: int):
+    """Warm every ladder rung's compiled programs (each rung is a distinct
+    XLA program per shape bucket) and feed measured dispatch times to the
+    LatencyModel so admission predicts from calibrated priors, not the
+    cost model's arbitrary absolute scale. Returns (model, s_ms) where
+    s_ms is the median measured service time of a `batch`-row dispatch at
+    the base rung."""
+    from repro.serve import LatencyModel
+    model = LatencyModel(slack=1.5)
+    for rung in ladder:
+        eng.warmup(search_cfg=rung)
+        for rows in (batch, eng.max_bucket):
+            for _ in range(3):
+                t0 = time.perf_counter()
+                eng.search(ds.queries[:rows], search_cfg=rung)
+                model.observe(eng, rung, rows,
+                              (time.perf_counter() - t0) * 1e3)
+    samples = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        eng.search(ds.queries[:batch], search_cfg=ladder[0])
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return model, float(np.median(samples))
+
+
+def overload(ds, eng, n_requests: int, batch: int = 8, seed: int = 0):
+    """2x-saturation Poisson ramp, baseline vs policy on identical traffic.
+
+    Coalescing is OFF for both runs so every dispatch is exactly `batch`
+    rows — the shape admission calibrated against — making this a clean
+    single-server M/D/1-style comparison (DESIGN.md §17).
+    """
+    from repro.configs import kbest as kcfg
+    from repro.data.vectors import recall_at_k
+    from repro.serve import DegradePolicy, Request, serve_loop
+
+    ladder = kcfg.degrade_ladder(eng.index.config)
+    model, s_ms = _calibrate(ds, eng, ladder, batch)
+    capacity_qps = batch / (s_ms / 1e3)
+    offered_qps = 2.0 * capacity_qps
+    slo_ms = max(6.0 * s_ms, 20.0)
+
+    # bottom-rung offline recall — the floor degraded serving must hold
+    _, ids = eng.index.search(ds.queries, search_cfg=ladder[-1])
+    floor = recall_at_k(np.asarray(ids), ds.gt_ids, ladder[-1].k)
+
+    rng = np.random.default_rng(seed)
+    arrivals_ms = np.cumsum(
+        rng.exponential(batch / offered_qps, size=n_requests)) * 1e3
+    starts = np.random.default_rng(seed + 1).integers(
+        0, len(ds.queries) - batch + 1, size=n_requests)
+
+    def make_requests():
+        return [Request(queries=ds.queries[s:s + batch],
+                        gt_ids=ds.gt_ids[s:s + batch], request_id=i,
+                        arrival_ms=float(a), deadline_ms=slo_ms)
+                for i, (a, s) in enumerate(zip(arrivals_ms, starts))]
+
+    def goodput_qps(rep):
+        ok = sum(r.n_served for r in rep.results
+                 if r.status == "ok" and not r.deadline_missed)
+        return ok / (max(rep.t_end_ms, float(arrivals_ms[-1])) / 1e3)
+
+    def run_row(rep, mode):
+        n_ok = sum(1 for r in rep.results if r.status == "ok")
+        return {
+            "mode": mode, "n_requests": rep.n_requests, "n_ok": n_ok,
+            "n_rejected": rep.n_rejected, "n_shed": rep.n_shed,
+            "n_failed": rep.n_failed,
+            "n_deadline_missed": rep.n_deadline_missed,
+            "goodput_qps": round(goodput_qps(rep), 1),
+            "sojourn_p50_ms": round(rep.sojourn_p50_ms, 3),
+            "sojourn_p99_ms": round(rep.sojourn_p99_ms, 3),
+            "recall_served": (None if rep.recall_at_k is None
+                              else round(rep.recall_at_k, 4)),
+        }
+
+    eng.reset_stats()
+    base = serve_loop(eng, make_requests(), coalesce=False, admission=False)
+    base_row = run_row(base, "baseline")
+
+    eng.reset_stats()
+    policy = DegradePolicy(ladder=tuple(ladder), high_ms=0.3 * slo_ms,
+                           low_ms=0.05 * slo_ms, patience=2)
+    pol = serve_loop(eng, make_requests(), coalesce=False, admission=True,
+                     latency_model=model, degrade=policy,
+                     max_queue=max(4, n_requests // 10))
+    pol_row = run_row(pol, "policy")
+    pol_row["degrade_transitions"] = len(policy.transitions)
+    pol_row["degrade_occupancy"] = {
+        str(k): v for k, v in sorted(policy.occupancy.items())}
+
+    result = {
+        "batch": batch, "n_requests": n_requests,
+        "service_ms_base": round(s_ms, 3),
+        "capacity_qps": round(capacity_qps, 1),
+        "offered_qps": round(offered_qps, 1), "slo_ms": round(slo_ms, 3),
+        "ladder": [f"L={r.L},nprobe={r.nprobe},rf={r.rescore_factor}"
+                   for r in ladder],
+        "floor_recall": round(floor, 4),
+        "runs": [base_row, pol_row],
+    }
+    print(f"# overload: capacity={capacity_qps:.0f}qps "
+          f"offered={offered_qps:.0f}qps slo={slo_ms:.1f}ms "
+          f"floor_recall={floor:.3f}")
+    for row in (base_row, pol_row):
+        print(f"#   {row['mode']}: goodput={row['goodput_qps']}qps "
+              f"p99={row['sojourn_p99_ms']}ms ok={row['n_ok']} "
+              f"rej={row['n_rejected']} shed={row['n_shed']} "
+              f"miss={row['n_deadline_missed']} "
+              f"recall={row['recall_served']}")
+
+    # --- hard assertions (ISSUE acceptance criteria) ---
+    problems = []
+    if pol_row["sojourn_p99_ms"] > slo_ms:
+        problems.append(f"policy served p99 {pol_row['sojourn_p99_ms']}ms "
+                        f"exceeds SLO {slo_ms:.1f}ms")
+    if pol_row["goodput_qps"] <= base_row["goodput_qps"]:
+        problems.append(f"policy goodput {pol_row['goodput_qps']} <= "
+                        f"baseline {base_row['goodput_qps']}")
+    if (pol_row["recall_served"] is not None
+            and pol_row["recall_served"] < floor - 0.02):
+        problems.append(f"served recall {pol_row['recall_served']} below "
+                        f"ladder floor {floor:.3f} - 0.02")
+    if problems:
+        raise RuntimeError("OVERLOAD POLICY REGRESSION: "
+                           + "; ".join(problems))
+    print("# overload: policy holds SLO, beats baseline goodput, "
+          "recall above ladder floor (ok)")
+    return result
+
+
+def crash_matrix() -> dict:
+    """Kill a save at every checkpoint; load must return the previous
+    intact index, the fully-committed new one, or raise IndexCorruptError
+    — never garbage. The bench-side twin of tests/test_crashsafe.py."""
+    from repro.configs import kbest as kcfg
+    from repro.core.index import KBest
+    from repro.core.persist import IndexCorruptError
+    from repro.core.sharded import ShardedKBest
+    from repro.serve.faults import InjectedCrash, crash_at, trace_steps
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((160, 32)).astype(np.float32)
+    y = rng.standard_normal((160, 32)).astype(np.float32)
+
+    def db_of(idx):
+        if hasattr(idx, "shards"):
+            return np.concatenate([s.db for s in idx.shards])
+        return idx.db
+
+    cases = [
+        ("single", KBest, kcfg.smoke_config()),
+        ("sharded", ShardedKBest, kcfg.sharded_smoke_config(n_shards=2)),
+    ]
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        for name, cls, cfg in cases:
+            old = cls(cfg).add(x)
+            new = cls(cfg).add(y)
+            steps = []
+            with trace_steps(steps):
+                new.save(os.path.join(td, name + "_probe"))
+            counts = {"steps": len(steps), "old": 0, "new": 0, "error": 0}
+            path = os.path.join(td, name)
+            for step in steps:
+                old.save(path)
+                with crash_at(step):
+                    try:
+                        new.save(path)
+                    except InjectedCrash:
+                        pass
+                try:
+                    loaded = cls.load(path)
+                except (IndexCorruptError, FileNotFoundError):
+                    counts["error"] += 1
+                    continue
+                db = db_of(loaded)
+                if np.array_equal(db, db_of(old)):
+                    counts["old"] += 1
+                elif np.array_equal(db, db_of(new)):
+                    counts["new"] += 1
+                else:
+                    raise RuntimeError(
+                        f"CRASH-SAFETY REGRESSION: garbage load after "
+                        f"kill at checkpoint {step!r} ({name})")
+            out[name] = counts
+            print(f"# crash-matrix {name}: {counts}")
+    return out
+
+
+def overload_main(smoke: bool = False, out: str | None = None,
+                  seed: int = 0) -> dict:
+    n, n_queries, n_requests = (1500, 64, 80) if smoke else (8000, 200, 240)
+    ds, eng = _build_overload_engine(n, n_queries, quick=smoke)
+    result = {
+        "bench": "serving-overload", "schema": 1, "smoke": smoke,
+        "n": n, "seed": seed,
+        "overload": overload(ds, eng, n_requests, seed=seed),
+        "crash_matrix": crash_matrix(),
+    }
+    for counts in result["crash_matrix"].values():
+        if counts["old"] + counts["error"] == 0:
+            raise RuntimeError("CRASH-SAFETY REGRESSION: no kill point "
+                               "preserved the previous index or raised "
+                               f"cleanly: {result['crash_matrix']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {out}")
+    return result
+
+
 def main(smoke: bool = False, n: int = 8000, n_queries: int = 200,
          n_requests: int = 40) -> None:
     if smoke:
@@ -163,7 +412,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run + hard compile-cache assertion")
+    ap.add_argument("--overload", action="store_true",
+                    help="2x-saturation ramp: baseline vs admission+degrade"
+                         " policy, plus the crash-point save/load matrix")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path for --overload (default: "
+                         "BENCH_serving.json, or BENCH_serving_smoke.json "
+                         "with --smoke)")
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--requests", type=int, default=40)
     args = ap.parse_args()
-    main(smoke=args.smoke, n=args.n, n_requests=args.requests)
+    if args.overload:
+        dest = args.out or ("BENCH_serving_smoke.json" if args.smoke
+                            else "BENCH_serving.json")
+        overload_main(smoke=args.smoke, out=dest)
+    else:
+        main(smoke=args.smoke, n=args.n, n_requests=args.requests)

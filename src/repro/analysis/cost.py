@@ -514,6 +514,17 @@ def search_cost(w: Workload, **kw) -> QueryCost:
             else graph_search_cost(w, **kw))
 
 
+def predict_service_s(config, search=None, Q: int = 1, n: int = 0) -> float:
+    """Latency-predictor hook for the serving tier (DESIGN.md §17):
+    predicted seconds for ONE dispatched batch of Q queries under
+    (config, search). Absolute scale assumes the Kunpeng roofline
+    constants; serve.degrade.LatencyModel multiplies in an EWMA-calibrated
+    measured/predicted ratio, so only the RELATIVE ordering across
+    (SearchConfig, bucket) keys is load-bearing here — the ordering the
+    roofline bench validates (Spearman rho vs live runs)."""
+    return search_cost(workload_from(config, search, n=n, Q=Q)).seconds
+
+
 # --------------------------------------------------------- check + report
 
 def run(tree: Tree) -> List[Violation]:

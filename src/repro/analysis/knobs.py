@@ -10,11 +10,19 @@ Liveness is attribute-read based with property bridging: a field only
 read by a property on its own class stays live iff that property (or a
 property chain from it) is itself read externally — `max_hops` is live
 through `hops_bound`, `pq_bits` through `nbits` -> `ksub`.
+
+The serving-tier knob classes (SERVE_CLASSES: `Request`,
+`DegradePolicy`, DESIGN.md §17) are covered allowlist-free under a
+relaxed rule: a field is live if read ANYWHERE in src/ outside the lint
+package, including the defining module — policy knobs like
+`DegradePolicy.patience` are legitimately consumed by the class's own
+methods, but a field nobody reads at all (a `deadline_ms` that admission
+forgot to consult) still fails CI.
 """
 from __future__ import annotations
 
 import ast
-from typing import Dict, List, Set
+from typing import Dict, List, Optional, Set
 
 from repro.analysis.common import (Tree, Violation, class_def,
                                    dataclass_fields, missing_file)
@@ -22,6 +30,10 @@ from repro.analysis.common import (Tree, Violation, class_def,
 CHECK = "dead_knobs"
 TYPES = "src/repro/core/types.py"
 CLASSES = ("SearchConfig", "IndexConfig", "QuantConfig")
+SERVE_CLASSES = (
+    ("src/repro/serve/scheduler.py", ("Request",)),
+    ("src/repro/serve/degrade.py", ("DegradePolicy",)),
+)
 ANALYSIS_PKG = "src/repro/analysis"
 
 
@@ -40,12 +52,12 @@ def _self_reads(fn: ast.FunctionDef) -> Set[str]:
     return out
 
 
-def _external_attr_reads(tree: Tree) -> Set[str]:
+def _attr_reads(tree: Tree, skip_module: Optional[str] = None) -> Set[str]:
     """Every attribute name read (Load context) anywhere in src/ outside
-    the defining module and the lint package itself."""
+    the lint package itself and, when given, `skip_module`."""
     out: Set[str] = set()
     for rel in tree.iter_py("src"):
-        if rel == TYPES or rel.startswith(ANALYSIS_PKG):
+        if rel == skip_module or rel.startswith(ANALYSIS_PKG):
             continue
         mod = tree.parse(rel)
         if mod is None:
@@ -54,6 +66,41 @@ def _external_attr_reads(tree: Tree) -> Set[str]:
             if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Load):
                 out.add(n.attr)
     return out
+
+
+def _external_attr_reads(tree: Tree) -> Set[str]:
+    """The strict variant for the core config classes: reads in the
+    defining module (core/types.py) do not count."""
+    return _attr_reads(tree, skip_module=TYPES)
+
+
+def _serve_violations(tree: Tree) -> List[Violation]:
+    """Allowlist-free liveness for the serving knob classes, under the
+    relaxed anywhere-in-src rule (module docstring). Fixture trees without
+    a serving tier are skipped silently — absence of the module is the
+    structure checks' concern, not a dead knob."""
+    reads: Optional[Set[str]] = None
+    violations: List[Violation] = []
+    for rel, class_names in SERVE_CLASSES:
+        mod = tree.parse(rel)
+        if mod is None:
+            continue
+        if reads is None:
+            reads = _attr_reads(tree)
+        for cls_name in class_names:
+            cls = class_def(mod, cls_name)
+            if cls is None:
+                violations.append(missing_file(
+                    CHECK, rel, f"serving knob class {cls_name} not found"))
+                continue
+            for name, lineno in dataclass_fields(cls):
+                if name not in reads:
+                    violations.append(Violation(
+                        CHECK, rel, lineno,
+                        f"serving knob {cls_name}.{name} is never read "
+                        f"anywhere in src/ (dead knob — set by callers, "
+                        f"consulted by nothing)"))
+    return violations
 
 
 def run(tree: Tree) -> List[Violation]:
@@ -92,4 +139,5 @@ def run(tree: Tree) -> List[Violation]:
                     f"config knob {cls_name}.{name} is never read outside "
                     f"its defining module (dead knob — the batch_B bug "
                     f"class)"))
+    violations.extend(_serve_violations(tree))
     return violations

@@ -231,6 +231,35 @@ def tune_grid(index_type: str) -> dict:
             "rescore_factor": (8, 32)}
 
 
+def degrade_ladder(cfg: IndexConfig, n_rungs: int = 4) -> tuple:
+    """Pre-tuned shed valve for the serving tier (DESIGN.md §17): rung 0 is
+    the preset's own SearchConfig; each further rung halves the dominant
+    accuracy/cost knobs — L and rescore_factor always, nprobe on the IVF
+    path — subject to the k <= L / beam_width <= L invariants. Candidates
+    that don't STRICTLY lower the predicted per-query cost are dropped
+    (e.g. halving L below the quantized wide-queue floor), so the ladder is
+    monotone cost-decreasing by construction; every rung is a valid
+    standalone SearchConfig (both pinned by tests/test_degrade.py)."""
+    from repro.analysis.cost import predict_service_s
+    s = cfg.search
+    ladder = [s]
+    last_cost = predict_service_s(cfg, s)
+    while len(ladder) < n_rungs:
+        cand = dataclasses.replace(
+            s,
+            L=max(s.k, s.beam_width, s.L // 2),
+            nprobe=max(1, s.nprobe // 2),
+            rescore_factor=max(1, s.rescore_factor // 2))
+        if cand == s:
+            break                        # every knob is at its floor
+        s = cand
+        c = predict_service_s(cfg, s)
+        if c < last_cost * 0.999:
+            ladder.append(s)
+            last_cost = c
+    return tuple(ladder)
+
+
 def ivf_smoke_config() -> IndexConfig:
     return IndexConfig(
         dim=32, metric="l2", index_type="ivf",

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core import build as build_mod
 from repro.core import ivf as ivf_mod
+from repro.core import persist
 from repro.core import quantize as qz
 from repro.core import reorder as reorder_mod
 from repro.core import search as search_mod
@@ -389,7 +390,12 @@ class KBest:
         return -neg, jnp.take_along_axis(cand, pos, axis=1), n_exact
 
     # ------------------------------------------------------------ save/load
-    def save(self, path: str) -> None:
+    def save(self, path: str, _label: str = "index") -> None:
+        """Crash-safe save (DESIGN.md §17): the .npz is written atomically
+        (tmp + fsync + rename), then the JSON sidecar — carrying a crc32
+        per array — commits the save atomically after it. A crash at any
+        point leaves either the previous save or a pair load() rejects;
+        `_label` namespaces the kill points (sharded saves pass shard{s})."""
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         arrs = {"db": np.asarray(self.db)}
@@ -415,56 +421,69 @@ class KBest:
         if self.bin is not None:
             arrs["bin_rot"] = np.asarray(self.bin.rot)
             arrs["bin_codes"] = np.asarray(self.bin_codes)
-        np.savez_compressed(p, **arrs)
+        sums = persist.save_arrays(_npz_path(p), arrs, f"{_label}.arrays")
         meta = {"entry": self.entry,
-                "config": _config_to_dict(self.config)}
+                "config": _config_to_dict(self.config),
+                "format": 2,
+                "checksums": sums}
         # append ".json" to the FULL name: with_suffix(".json") used to map
         # both save("a.graph") and save("a.ivf") onto "a.json", so two
         # indexes sharing a stem clobbered each other's metadata
-        _meta_path(p).write_text(json.dumps(meta))
+        persist.atomic_write(_meta_path(p), json.dumps(meta).encode(),
+                             f"{_label}.meta")
 
     @classmethod
     def load(cls, path: str) -> "KBest":
+        """Load with validation (DESIGN.md §17): any unreadable/torn sidecar
+        or npz, and any array whose crc32 disagrees with the sidecar's,
+        raises persist.IndexCorruptError — never a silently wrong index.
+        Sidecars from pre-checksum saves (no "checksums" key) still load."""
         p = Path(path)
         mp = _meta_path(p)
         if not mp.exists() and p.with_suffix(".json").exists():
             mp = p.with_suffix(".json")     # pre-fix saves (load-compat)
-        meta = json.loads(mp.read_text())
+        try:
+            meta = json.loads(mp.read_text())
+        except FileNotFoundError:
+            raise
+        except Exception as e:              # torn/garbage sidecar bytes
+            raise persist.IndexCorruptError(
+                f"unreadable index sidecar at {mp}: {e!r}") from e
         cfg = _config_from_dict(meta["config"])
         idx = cls(cfg)
-        with np.load(p if p.suffix == ".npz" else str(p) + ".npz") as z:
-            idx.db = jnp.asarray(z["db"])
-            if "graph" in z:
-                idx.graph = jnp.asarray(z["graph"])
-            if "ivf_centroids" in z:
-                pq_state = None
-                if "ivf_codebooks" in z:
-                    books = jnp.asarray(z["ivf_codebooks"])
-                    pq_state = qz.PQState(books, books.shape[0],
-                                          books.shape[2])
-                bin_state = qz.BinState(jnp.asarray(z["ivf_bin_rot"])) \
-                    if "ivf_bin_rot" in z else None
-                idx.ivf = ivf_mod.IVFState(
-                    centroids=jnp.asarray(z["ivf_centroids"]),
-                    list_ids=jnp.asarray(z["ivf_list_ids"]),
-                    list_codes=jnp.asarray(z["ivf_list_codes"]),
-                    pq=pq_state,
-                    residual=cfg.ivf.residual,
-                    packed=cfg.quant.kind == "pq4",
-                    bin=bin_state)
-            if "pq_codebooks" in z:
-                books = jnp.asarray(z["pq_codebooks"])
-                idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
-                idx.pq_codes = jnp.asarray(z["pq_codes"])
-            if "sq_scale" in z:
-                idx.sq = qz.SQState(jnp.asarray(z["sq_scale"]),
-                                    jnp.asarray(z["sq_zero"]))
-                idx.sq_codes = jnp.asarray(z["sq_codes"])
-            if "bin_rot" in z:
-                idx.bin = qz.BinState(jnp.asarray(z["bin_rot"]))
-                idx.bin_codes = jnp.asarray(z["bin_codes"])
-            if "order" in z:
-                idx.order = np.asarray(z["order"])
+        z = persist.load_arrays(_npz_path(p), meta.get("checksums"))
+        idx.db = jnp.asarray(z["db"])
+        if "graph" in z:
+            idx.graph = jnp.asarray(z["graph"])
+        if "ivf_centroids" in z:
+            pq_state = None
+            if "ivf_codebooks" in z:
+                books = jnp.asarray(z["ivf_codebooks"])
+                pq_state = qz.PQState(books, books.shape[0],
+                                      books.shape[2])
+            bin_state = qz.BinState(jnp.asarray(z["ivf_bin_rot"])) \
+                if "ivf_bin_rot" in z else None
+            idx.ivf = ivf_mod.IVFState(
+                centroids=jnp.asarray(z["ivf_centroids"]),
+                list_ids=jnp.asarray(z["ivf_list_ids"]),
+                list_codes=jnp.asarray(z["ivf_list_codes"]),
+                pq=pq_state,
+                residual=cfg.ivf.residual,
+                packed=cfg.quant.kind == "pq4",
+                bin=bin_state)
+        if "pq_codebooks" in z:
+            books = jnp.asarray(z["pq_codebooks"])
+            idx.pq = qz.PQState(books, books.shape[0], books.shape[2])
+            idx.pq_codes = jnp.asarray(z["pq_codes"])
+        if "sq_scale" in z:
+            idx.sq = qz.SQState(jnp.asarray(z["sq_scale"]),
+                                jnp.asarray(z["sq_zero"]))
+            idx.sq_codes = jnp.asarray(z["sq_codes"])
+        if "bin_rot" in z:
+            idx.bin = qz.BinState(jnp.asarray(z["bin_rot"]))
+            idx.bin_codes = jnp.asarray(z["bin_codes"])
+        if "order" in z:
+            idx.order = np.asarray(z["order"])
         idx.entry = int(meta["entry"])
         return idx
 
@@ -541,6 +560,12 @@ def _meta_path(p: Path) -> Path:
     """Metadata sidecar: the FULL array-file name + ".json" (so "a.graph"
     and "a.ivf" get distinct sidecars, unlike with_suffix)."""
     return p.with_name(p.name + ".json")
+
+
+def _npz_path(p: Path) -> Path:
+    """The array file np.savez would have produced for `p` (".npz" appended
+    unless already present) — save and load must agree on it."""
+    return p if p.suffix == ".npz" else Path(str(p) + ".npz")
 
 
 def _known_fields(cls, d: dict) -> dict:

@@ -66,6 +66,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import index as index_mod
+from repro.core import persist
 from repro.core import search as search_mod
 from repro.core.index import (KBest, _config_from_dict, _config_to_dict,
                               mask_padded_lanes, prep_queries,
@@ -215,24 +217,63 @@ class ShardedKBest:
         return dists, ids, (merge_stats(per_s) if with_stats else None)
 
     # ------------------------------------------------------------ save/load
-    def _shard_path(self, path: str, s: int) -> str:
+    @staticmethod
+    def _shard_path(path: str, s: int) -> str:
         return f"{path}.shard{s}"
 
     def save(self, path: str) -> None:
-        """Per-shard artifacts (KBest.save each) + one metadata sidecar."""
+        """Per-shard artifacts (KBest.save each, atomic + checksummed) with
+        the `.sharded.json` manifest written LAST as the commit point
+        (DESIGN.md §17). The manifest embeds a crc32 of every shard's
+        sidecar bytes, so a crash that leaves new shards under an old
+        manifest (or vice versa) is a detectable partial save, not a
+        loadable mixed-generation mesh."""
         assert self.shards, "call add() first"
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         for s, shard in enumerate(self.shards):
-            shard.save(self._shard_path(path, s))
+            shard.save(self._shard_path(path, s), _label=f"shard{s}")
+        shard_meta_crc = {
+            str(s): persist.file_crc32(
+                index_mod._meta_path(Path(self._shard_path(path, s))))
+            for s in range(len(self.shards))}
         meta = {"n_shards": self.config.n_shards,
                 "offsets": np.asarray(self.offsets).tolist(),
-                "config": _config_to_dict(self.config)}
-        Path(str(p) + ".sharded.json").write_text(json.dumps(meta))
+                "config": _config_to_dict(self.config),
+                "format": 2,
+                "shard_meta_crc": shard_meta_crc}
+        persist.atomic_write(Path(str(p) + ".sharded.json"),
+                             json.dumps(meta).encode(), "manifest")
 
     @classmethod
     def load(cls, path: str) -> "ShardedKBest":
-        meta = json.loads(Path(str(path) + ".sharded.json").read_text())
+        """Manifest-first load: a manifest whose per-shard sidecar crc32s
+        disagree with the shard files on disk means the save that wrote
+        them never committed — raise persist.IndexCorruptError rather than
+        assembling shards from different save generations."""
+        mp = Path(str(path) + ".sharded.json")
+        try:
+            meta = json.loads(mp.read_text())
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            raise persist.IndexCorruptError(
+                f"unreadable sharded manifest at {mp}: {e!r}") from e
+        crcs = meta.get("shard_meta_crc")   # absent on pre-§17 manifests
+        if crcs is not None:
+            for s in range(meta["n_shards"]):
+                sp = index_mod._meta_path(Path(cls._shard_path(path, s)))
+                try:
+                    got = persist.file_crc32(sp)
+                except FileNotFoundError as e:
+                    raise persist.IndexCorruptError(
+                        f"manifest names shard {s} but its sidecar {sp} "
+                        f"is missing (partial sharded save)") from e
+                if got != int(crcs[str(s)]):
+                    raise persist.IndexCorruptError(
+                        f"shard {s} sidecar {sp} does not match the "
+                        f"manifest (crc32 {got} != {crcs[str(s)]}) — "
+                        f"partial sharded save")
         cfg = _config_from_dict(meta["config"])
         idx = cls(cfg, n_shards=meta["n_shards"])
         idx.offsets = np.asarray(meta["offsets"], dtype=np.int64)

@@ -1,4 +1,4 @@
-"""Batch-serving engine for KBest indexes (DESIGN.md §11).
+"""Batch-serving engine for KBest indexes (DESIGN.md §11, §17).
 
     from repro.serve import SearchEngine, Request, serve_loop
 
@@ -8,14 +8,25 @@ buckets and dispatched through a compile cache keyed on
 (bucket, SearchConfig, index_type, quant), so variable-size request
 traffic never re-traces XLA. `serve_loop` drains a queue of
 heterogeneous `Request`s — mixed batch sizes, mixed k, graph and IVF
-engines side by side — with true served-count accounting.
+engines side by side — with true served-count accounting, and owns the
+overload story: deadline admission control (`Request.deadline_ms` +
+`LatencyModel`), bounded-queue shedding, graceful degradation down a
+pre-tuned SearchConfig ladder (`DegradePolicy`), and a per-request error
+boundary. `serve.faults` is the matching fault-injection harness.
 """
+from repro.serve.degrade import DegradePolicy, LatencyModel
 from repro.serve.engine import (EngineStats, SearchEngine, bucket_ladder,
-                                bucket_for)
+                                bucket_for, percentiles)
+from repro.serve.faults import EngineFault, FaultInjector, InjectedCrash
 from repro.serve.scheduler import (Request, RequestResult, ServeReport,
-                                   serve_loop)
+                                   STATUS_FAILED, STATUS_OK, STATUS_REJECTED,
+                                   STATUS_SHED, serve_loop)
 
 __all__ = [
     "SearchEngine", "EngineStats", "bucket_for", "bucket_ladder",
+    "percentiles",
     "Request", "RequestResult", "ServeReport", "serve_loop",
+    "STATUS_OK", "STATUS_REJECTED", "STATUS_SHED", "STATUS_FAILED",
+    "DegradePolicy", "LatencyModel",
+    "FaultInjector", "EngineFault", "InjectedCrash",
 ]

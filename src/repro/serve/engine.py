@@ -61,6 +61,17 @@ def bucket_ladder(min_bucket: int = 8, max_bucket: int = 256) -> Tuple[int, ...]
     return tuple(out)
 
 
+def percentiles(values) -> Tuple[float, float, float]:
+    """(p50, p95, p99) with the empty-history case guarded: percentile
+    telemetry is read before traffic arrives and after drains where every
+    request was rejected/shed, and np.percentile([]) raises."""
+    arr = np.asarray(list(values), np.float64)
+    if arr.size == 0:
+        return 0.0, 0.0, 0.0
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 95)),
+            float(np.percentile(arr, 99)))
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineStats:
     """Telemetry snapshot over every call since construction/reset."""
@@ -77,6 +88,12 @@ class EngineStats:
     dists_per_query: float     # mean over valid lanes (cross-family units)
     et_fire_rate: float        # fraction of valid lanes that early-terminated
     recall_at_k: Optional[float]   # only when gt_ids were supplied
+    # ---- overload telemetry (DESIGN.md §17; fed by serve_loop) ----
+    n_rejected: int = 0        # deadline-infeasible at admission
+    n_shed: int = 0            # dropped at a full bounded queue
+    n_failed: int = 0          # dispatch raised; failed its own result
+    deadline_miss_rate: float = 0.0   # served-late / deadline-carrying
+    degrade_occupancy: Tuple[Tuple[int, int], ...] = ()  # (level, dispatches)
 
     def summary(self) -> str:
         rec = ("-" if self.recall_at_k is None
@@ -87,7 +104,10 @@ class EngineStats:
                 f"lat p50={self.lat_p50_ms:.2f} p95={self.lat_p95_ms:.2f} "
                 f"p99={self.lat_p99_ms:.2f} ms | "
                 f"dists/q={self.dists_per_query:.0f} "
-                f"et_rate={self.et_fire_rate:.2f} recall={rec}")
+                f"et_rate={self.et_fire_rate:.2f} recall={rec} | "
+                f"rej={self.n_rejected} shed={self.n_shed} "
+                f"fail={self.n_failed} "
+                f"miss={self.deadline_miss_rate:.2f}")
 
 
 class SearchEngine:
@@ -118,6 +138,13 @@ class SearchEngine:
         self._sum_et = 0
         self._gt_hits = 0.0
         self._gt_queries = 0
+        # overload telemetry (DESIGN.md §17), fed by serve_loop's note_*
+        self._n_rejected = 0
+        self._n_shed = 0
+        self._n_failed = 0
+        self._n_deadline = 0
+        self._n_deadline_missed = 0
+        self._degrade_occ: Dict[int, int] = {}
 
     # ------------------------------------------------------------- compile
     def _cache_key(self, bucket: int, scfg: SearchConfig) -> tuple:
@@ -226,9 +253,27 @@ class SearchEngine:
         return dists, ids
 
     # ----------------------------------------------------------- telemetry
+    def note_rejected(self, n: int = 1) -> None:
+        self._n_rejected += n
+
+    def note_shed(self, n: int = 1) -> None:
+        self._n_shed += n
+
+    def note_failed(self, n: int = 1) -> None:
+        self._n_failed += n
+
+    def note_deadline(self, missed: bool) -> None:
+        """One served deadline-carrying request: hit or miss."""
+        self._n_deadline += 1
+        self._n_deadline_missed += int(missed)
+
+    def note_degrade(self, level: int) -> None:
+        """One dispatch served at this degrade-ladder level."""
+        self._degrade_occ[level] = self._degrade_occ.get(level, 0) + 1
+
     def stats(self) -> EngineStats:
+        p50, p95, p99 = percentiles(self._lat_ms)
         lat = np.asarray(self._lat_ms, np.float64)
-        have = lat.size > 0
         nq = max(self._n_queries, 1)
         return EngineStats(
             n_requests=lat.size,
@@ -236,14 +281,20 @@ class SearchEngine:
             n_traces=self.n_traces,
             cache_hits=self.cache_hits,
             cache_misses=self.cache_misses,
-            lat_p50_ms=float(np.percentile(lat, 50)) if have else 0.0,
-            lat_p95_ms=float(np.percentile(lat, 95)) if have else 0.0,
-            lat_p99_ms=float(np.percentile(lat, 99)) if have else 0.0,
-            mean_lat_ms=float(lat.mean()) if have else 0.0,
+            lat_p50_ms=p50,
+            lat_p95_ms=p95,
+            lat_p99_ms=p99,
+            mean_lat_ms=float(lat.mean()) if lat.size else 0.0,
             dists_per_query=self._sum_dists / nq,
             et_fire_rate=self._sum_et / nq,
             recall_at_k=(self._gt_hits / self._gt_queries
                          if self._gt_queries else None),
+            n_rejected=self._n_rejected,
+            n_shed=self._n_shed,
+            n_failed=self._n_failed,
+            deadline_miss_rate=(self._n_deadline_missed / self._n_deadline
+                                if self._n_deadline else 0.0),
+            degrade_occupancy=tuple(sorted(self._degrade_occ.items())),
         )
 
     def reset_stats(self) -> None:
@@ -255,3 +306,9 @@ class SearchEngine:
         self._sum_et = 0
         self._gt_hits = 0.0
         self._gt_queries = 0
+        self._n_rejected = 0
+        self._n_shed = 0
+        self._n_failed = 0
+        self._n_deadline = 0
+        self._n_deadline_missed = 0
+        self._degrade_occ = {}

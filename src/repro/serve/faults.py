@@ -1,0 +1,94 @@
+"""Fault injection harness for the serving and persistence tiers
+(DESIGN.md §17).
+
+Robustness claims need an adversary: this module is how tests and
+`benchmarks/serving.py --overload` manufacture the failures the serving
+loop must survive —
+
+  latency spikes    — per-request virtual service-time penalties (the
+                      scheduler's clock, not a real sleep), deterministic
+                      by request_id, so queue-delay / deadline behavior is
+                      reproducible in CI.
+  engine exceptions — `poisoned` request_ids make the dispatch raise
+                      `EngineFault` inside serve_loop's error boundary;
+                      the poisoned request must fail alone.
+  clock skew        — a constant offset added to every arrival timestamp;
+                      admission decisions use only relative times, so
+                      statuses must be skew-invariant (pinned by test).
+
+Persistence crash points ride `core.persist.checkpoint`: `trace_steps()`
+records every kill point of a save protocol, `crash_at(step)` kills the
+next save at exactly that step with `InjectedCrash`
+(tests/test_crashsafe.py runs the full matrix).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterable, List, Set
+
+from repro.core import persist
+
+
+class EngineFault(RuntimeError):
+    """Injected engine-side failure (stands in for OOM, kernel asserts,
+    poisoned inputs — anything a dispatch can raise)."""
+
+
+class InjectedCrash(RuntimeError):
+    """Injected kill inside a save protocol step (simulated power loss)."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault plan for one serve_loop drain."""
+
+    latency_spikes: Dict[int, float] = dataclasses.field(default_factory=dict)
+    poisoned: Set[int] = dataclasses.field(default_factory=set)
+    skew_ms: float = 0.0
+
+    def check(self, group: Iterable) -> None:
+        """Raise EngineFault if any request in the dispatch group is
+        poisoned — called inside serve_loop's error boundary, before the
+        engine runs, so the failure is attributable per request."""
+        for r in group:
+            if r.request_id in self.poisoned:
+                raise EngineFault(
+                    f"injected engine failure for request {r.request_id}")
+
+    def extra_ms(self, group: Iterable) -> float:
+        """Total virtual service-time penalty for a dispatch group."""
+        return float(sum(self.latency_spikes.get(r.request_id, 0.0)
+                         for r in group))
+
+
+# ------------------------------------------------------ persistence kills
+@contextlib.contextmanager
+def trace_steps(out: List[str]):
+    """Record every persist.checkpoint() step name fired inside the block —
+    the kill-point enumeration a crash matrix iterates over."""
+    def hook(step: str) -> None:
+        out.append(step)
+    persist.set_crash_hook(hook)
+    try:
+        yield out
+    finally:
+        persist.set_crash_hook(None)
+
+
+@contextlib.contextmanager
+def crash_at(step: str):
+    """Kill the save running inside the block at the FIRST occurrence of
+    `step` (later occurrences run clean, so re-saves inside the same
+    block — e.g. restoring a baseline — are unaffected)."""
+    fired = [False]
+
+    def hook(s: str) -> None:
+        if s == step and not fired[0]:
+            fired[0] = True
+            raise InjectedCrash(f"injected crash at save step '{step}'")
+    persist.set_crash_hook(hook)
+    try:
+        yield
+    finally:
+        persist.set_crash_hook(None)

@@ -1,0 +1,5 @@
+from repro.core.types import SearchConfig
+
+
+def search(cfg: SearchConfig):
+    return cfg.L

@@ -1,0 +1,8 @@
+"""Clean core config classes: this fixture's seeded violations live in
+the serve/ tree only."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    L: int = 64

@@ -1,0 +1,16 @@
+"""Seeded violation: phantom_watermark_ms is declared but no method (or
+anyone else) reads it — a watermark that can never trigger."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class DegradePolicy:
+    ladder: tuple = ()
+    high_ms: float = 50.0
+    phantom_watermark_ms: float = 0.0
+
+    def observe(self, queue_delay_ms):
+        # ladder + high_ms: live via self-reads (the relaxed serve rule)
+        if queue_delay_ms > self.high_ms:
+            return len(self.ladder)
+        return 0

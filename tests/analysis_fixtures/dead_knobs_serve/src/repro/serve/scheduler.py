@@ -1,0 +1,18 @@
+"""Seeded violation: phantom_deadline_knob is set by callers but never
+consulted anywhere — the admission-forgot-to-read-it bug class."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class Request:
+    queries: object = None
+    deadline_ms: float = 0.0
+    phantom_deadline_knob: float = 0.0
+
+
+def serve_loop(requests):
+    out = []
+    for r in requests:
+        if r.deadline_ms > 0:            # deadline_ms: live
+            out.append(r.queries)        # queries: live
+    return out

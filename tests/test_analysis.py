@@ -88,6 +88,26 @@ def test_fixture_messages_name_the_seeded_violation():
     assert any("§9" in v.message for v in dx)       # dangling citation
 
 
+def test_dead_knobs_covers_serving_classes():
+    """The serve-tier extension (DESIGN.md §17) fires allowlist-free on
+    unread Request/DegradePolicy fields, under the relaxed rule that
+    self-reads in the defining class keep a policy knob live."""
+    v = run_check("dead_knobs", FIXTURES / "dead_knobs_serve")
+    msgs = [x.message for x in v]
+    assert any("Request.phantom_deadline_knob" in m for m in msgs), msgs
+    assert any("DegradePolicy.phantom_watermark_ms" in m for m in msgs), msgs
+    # live fields — externally read (deadline_ms, queries) or self-read by
+    # the class's own methods (ladder, high_ms) — must NOT fire
+    for live in ("deadline_ms", "queries", "ladder", "high_ms"):
+        assert not any(f".{live}" in m for m in msgs), (live, msgs)
+
+
+def test_dead_knobs_serve_fields_live_on_real_tree():
+    """Every field the scheduler/degrade classes declare is actually
+    consulted in src/ — the check that guards this PR's own knobs."""
+    assert run_check("dead_knobs", ROOT) == []
+
+
 # ----------------------------------------------------------- unit bits
 def test_parity_discovers_all_kernels():
     kernels = {name for _, name, _ in parity.find_kernels(Tree(ROOT))}

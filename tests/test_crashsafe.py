@@ -1,0 +1,177 @@
+"""Crash-safe persistence (DESIGN.md §17): kill the save at EVERY protocol
+step and assert load() sees the previous intact index, the new complete
+one (only past the final commit), or a clean IndexCorruptError — never a
+silently wrong index. Plus direct corruption: truncation, bit flips, torn
+sidecars, mixed-generation sharded saves."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs import kbest as kcfg
+from repro.core.index import KBest, _meta_path, _npz_path
+from repro.core.persist import IndexCorruptError
+from repro.core.sharded import ShardedKBest
+from repro.serve.faults import InjectedCrash, crash_at, trace_steps
+
+SEED = 7
+N = 160
+
+
+def _build(seed: int) -> KBest:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((N, 32)).astype(np.float32)
+    return KBest(kcfg.smoke_config()).add(x)
+
+
+def _build_sharded(seed: int) -> ShardedKBest:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((N, 32)).astype(np.float32)
+    return ShardedKBest(kcfg.sharded_smoke_config(2)).add(x)
+
+
+@pytest.fixture(scope="module")
+def old_new():
+    return _build(SEED), _build(SEED + 1)
+
+
+@pytest.fixture(scope="module")
+def old_new_sharded():
+    return _build_sharded(SEED), _build_sharded(SEED + 1)
+
+
+def _db(idx) -> np.ndarray:
+    if isinstance(idx, ShardedKBest):
+        return np.concatenate([np.asarray(s.db) for s in idx.shards])
+    return np.asarray(idx.db)
+
+
+def _steps(save_fn, path) -> list:
+    out = []
+    with trace_steps(out):
+        save_fn(path)
+    assert out, "save fired no checkpoints — the crash matrix is empty"
+    return out
+
+
+def _run_matrix(old, new, loader, tmp_path, name):
+    """For each kill point: restore the old save, crash the new save at
+    that step, and demand load() yields old bytes, new bytes, or a clean
+    IndexCorruptError."""
+    path = str(tmp_path / name)
+    steps = _steps(new.save, str(tmp_path / (name + ".probe")))
+    old_db, new_db = _db(old), _db(new)
+    saw_error = saw_old = False
+    for step in steps:
+        old.save(path)                      # reset to a committed baseline
+        with crash_at(step):
+            with pytest.raises(InjectedCrash):
+                new.save(path)
+        try:
+            got = _db(loader(path))
+        except IndexCorruptError:
+            saw_error = True
+            continue
+        is_old = got.shape == old_db.shape and np.array_equal(got, old_db)
+        is_new = got.shape == new_db.shape and np.array_equal(got, new_db)
+        saw_old |= is_old
+        assert is_old or is_new, \
+            f"kill at '{step}' loaded a mixed-generation index"
+    # the matrix must actually exercise both outcomes, or it proves nothing
+    assert saw_old, "no kill point preserved the old index"
+    assert saw_error, "no kill point produced a detectable partial save"
+
+
+def test_crash_matrix_single(old_new, tmp_path):
+    old, new = old_new
+    _run_matrix(old, new, KBest.load, tmp_path, "idx.npz")
+
+
+def test_crash_matrix_sharded(old_new_sharded, tmp_path):
+    old, new = old_new_sharded
+    _run_matrix(old, new, ShardedKBest.load, tmp_path, "mesh")
+
+
+def test_first_save_crash_leaves_clean_error_or_nothing(old_new, tmp_path):
+    """With NO previous save, a mid-save crash must yield FileNotFoundError,
+    IndexCorruptError, or (only when the kill lands after the sidecar
+    commit) the complete new index — never a partial one."""
+    _, new = old_new
+    steps = _steps(new.save, str(tmp_path / "probe.npz"))
+    for i, step in enumerate(steps):
+        path = str(tmp_path / f"fresh{i}.npz")
+        with crash_at(step):
+            with pytest.raises(InjectedCrash):
+                new.save(path)
+        try:
+            got = KBest.load(path)
+        except (FileNotFoundError, IndexCorruptError):
+            continue
+        assert step == "index.meta.committed", \
+            f"kill at pre-commit step '{step}' still loaded"
+        assert np.array_equal(np.asarray(got.db), np.asarray(new.db))
+
+
+def test_truncated_npz_fails_loudly(old_new, tmp_path):
+    old, _ = old_new
+    path = tmp_path / "t.npz"
+    old.save(str(path))
+    raw = _npz_path(path).read_bytes()
+    _npz_path(path).write_bytes(raw[:len(raw) // 2])
+    with pytest.raises(IndexCorruptError):
+        KBest.load(str(path))
+
+
+def test_bitflip_fails_checksum(old_new, tmp_path):
+    """A flipped payload byte that still unzips must be caught by the
+    per-array crc32 — flip inside the (stored-size-dominant) data region."""
+    old, _ = old_new
+    path = tmp_path / "b.npz"
+    old.save(str(path))
+    raw = bytearray(_npz_path(path).read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    _npz_path(path).write_bytes(bytes(raw))
+    with pytest.raises(IndexCorruptError):
+        KBest.load(str(path))
+
+
+def test_torn_sidecar_fails_loudly(old_new, tmp_path):
+    old, _ = old_new
+    path = tmp_path / "s.npz"
+    old.save(str(path))
+    mp = _meta_path(path)
+    mp.write_text(mp.read_text()[:20])      # torn JSON
+    with pytest.raises(IndexCorruptError):
+        KBest.load(str(path))
+
+
+def test_legacy_sidecar_without_checksums_still_loads(old_new, tmp_path):
+    """Pre-§17 saves carry no "checksums" key: load() skips verification
+    instead of rejecting every old artifact on disk."""
+    old, _ = old_new
+    path = tmp_path / "legacy.npz"
+    old.save(str(path))
+    meta = json.loads(_meta_path(path).read_text())
+    meta.pop("checksums")
+    meta.pop("format")
+    _meta_path(path).write_text(json.dumps(meta))
+    got = KBest.load(str(path))
+    assert np.array_equal(np.asarray(got.db), np.asarray(old.db))
+
+
+def test_mixed_generation_sharded_save_rejected(old_new_sharded, tmp_path):
+    """Overwrite shard0 with a different save generation under an
+    unchanged manifest: the manifest's sidecar crc32 must catch it."""
+    old, new = old_new_sharded
+    path = str(tmp_path / "mix")
+    old.save(path)
+    new.shards[0].save(ShardedKBest._shard_path(path, 0), _label="shard0")
+    with pytest.raises(IndexCorruptError):
+        ShardedKBest.load(path)
+
+
+def test_no_stray_tmp_files_after_clean_save(old_new, tmp_path):
+    old, _ = old_new
+    old.save(str(tmp_path / "clean.npz"))
+    assert not list(Path(tmp_path).glob("*.tmp"))

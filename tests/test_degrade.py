@@ -1,0 +1,157 @@
+"""Degrade ladder + policy (DESIGN.md §17): every rung is a valid
+standalone SearchConfig whose measured recall behaves (via the tuner's
+_memo_eval on a 5k split), the ladder is strictly monotone in predicted
+cost, and DegradePolicy walks it down under sustained queue delay and
+back up on recovery — with hysteresis, never past the ends."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.cost import predict_service_s
+from repro.configs import kbest as kcfg
+from repro.core.index import KBest
+from repro.core.tune import _memo_eval
+from repro.core.types import SearchConfig
+from repro.serve import (DegradePolicy, FaultInjector, Request, SearchEngine,
+                         serve_loop)
+
+LADDER_CASES = {
+    "graph": kcfg.index_config("deep_like"),
+    "ivf": kcfg.ivf_index_config("deep_like"),
+    "bin": kcfg.bin_index_config("deep_like"),
+    "ivf_bin": kcfg.ivf_bin_index_config("deep_like"),
+}
+
+
+# ----------------------------------------------------------- ladder shape
+@pytest.mark.parametrize("name", sorted(LADDER_CASES))
+def test_ladder_monotone_predicted_cost(name):
+    cfg = LADDER_CASES[name]
+    ladder = kcfg.degrade_ladder(cfg)
+    assert len(ladder) >= 2, "a one-rung ladder cannot degrade"
+    assert ladder[0] == cfg.search, "rung 0 must be the preset itself"
+    costs = [predict_service_s(cfg, s) for s in ladder]
+    assert all(a > b for a, b in zip(costs, costs[1:])), costs
+
+
+@pytest.mark.parametrize("name", sorted(LADDER_CASES))
+def test_ladder_rungs_are_valid_standalone_configs(name):
+    for s in kcfg.degrade_ladder(LADDER_CASES[name]):
+        assert isinstance(s, SearchConfig)
+        assert s.k <= s.L and s.beam_width <= s.L
+        assert s.nprobe >= 1 and s.rescore_factor >= 1
+        # the frozen-dataclass invariants re-check on reconstruction
+        SearchConfig(**dataclasses.asdict(s))
+
+
+def test_ladder_rungs_searchable_via_memo_eval():
+    """Every rung of the IVF deep_like ladder actually runs on a 5k split,
+    through the same memoized evaluator the tuner uses; quality must not
+    INCREASE down the ladder beyond noise (cheaper rungs trade recall)."""
+    from repro.data.vectors import make_dataset
+    ds = make_dataset("deep_like", n=5000, n_queries=50, k=10)
+    cfg = kcfg.ivf_index_config("deep_like")
+    index = KBest(dataclasses.replace(cfg, dim=ds.base.shape[1])).add(ds.base)
+    ev = _memo_eval(index, ds.queries, ds.gt_ids)
+    ladder = kcfg.degrade_ladder(index.config)
+    recalls = []
+    for rung in ladder:
+        rec, _ = ev(rung)
+        assert 0.0 <= rec <= 1.0
+        recalls.append(rec)
+    assert recalls[0] >= recalls[-1], recalls
+    assert recalls[0] >= 0.8, f"full-quality rung too weak: {recalls}"
+    # the memoized evaluator must dedupe repeat rung evaluations
+    n_cached = len(ev.cache)
+    ev(ladder[0])
+    assert len(ev.cache) == n_cached
+
+
+# ---------------------------------------------------------------- policy
+def _ladder3():
+    base = SearchConfig(L=64, k=10)
+    return (base,
+            dataclasses.replace(base, L=32),
+            dataclasses.replace(base, L=16))
+
+
+def test_policy_steps_down_and_recovers():
+    p = DegradePolicy(ladder=_ladder3(), high_ms=100.0, low_ms=10.0,
+                      patience=2)
+    assert p.observe(500.0) == 0          # 1 over: not yet
+    assert p.observe(500.0) == 1          # patience reached: step down
+    assert p.observe(500.0) == 1
+    assert p.observe(500.0) == 2          # and again
+    assert p.observe(500.0) == 2          # bottom rung: capped
+    assert p.observe(1.0) == 2
+    assert p.observe(1.0) == 1            # recovery steps back up
+    assert p.observe(1.0) == 1
+    assert p.observe(1.0) == 0
+    assert p.observe(1.0) == 0            # top rung: capped
+    assert p.transitions == [(2, 0, 1), (4, 1, 2), (7, 2, 1), (9, 1, 0)]
+    assert sum(p.occupancy.values()) == 10
+
+
+def test_policy_hysteresis_band_holds_level():
+    p = DegradePolicy(ladder=_ladder3(), high_ms=100.0, low_ms=10.0,
+                      patience=1)
+    p.observe(500.0)
+    assert p.level == 1
+    for _ in range(20):                   # inside the band: no movement
+        assert p.observe(50.0) == 1
+    assert len(p.transitions) == 1
+
+
+def test_policy_patience_requires_consecutive_observations():
+    p = DegradePolicy(ladder=_ladder3(), high_ms=100.0, low_ms=10.0,
+                      patience=3)
+    for _ in range(5):                    # over, over, reset, over, over...
+        p.observe(500.0)
+        p.observe(500.0)
+        p.observe(1.0)
+    assert p.level == 0 and p.transitions == []
+
+
+def test_policy_apply_preserves_request_k():
+    p = DegradePolicy(ladder=_ladder3(), high_ms=1.0, low_ms=0.5, patience=1)
+    ask = SearchConfig(L=128, k=20)
+    assert p.apply(ask) == ask            # rung 0: untouched
+    p.observe(100.0)
+    got = p.apply(ask)
+    assert got.k == 20 and got.L == 32    # rung knobs, request's k
+
+
+# ------------------------------------------------------ serve integration
+@pytest.fixture(scope="module")
+def tiny_engine():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((240, 32)).astype(np.float32)
+    index = KBest(kcfg.smoke_config()).add(x)
+    return SearchEngine(index, min_bucket=8, max_bucket=32), x
+
+
+def test_serve_loop_degrades_under_overload_and_recovers(tiny_engine):
+    eng, x = tiny_engine
+    ladder = kcfg.degrade_ladder(eng.index.config)
+    policy = DegradePolicy(ladder=ladder, high_ms=100.0, low_ms=10.0,
+                           patience=2)
+    q = x[:4]
+    # burst at t=0 behind a 1s virtual spike -> sustained queue delay;
+    # then arrivals spaced 10s apart -> recovery
+    reqs = [Request(queries=q, request_id=i, arrival_ms=0.0)
+            for i in range(6)]
+    reqs += [Request(queries=q, request_id=10 + i,
+                     arrival_ms=20_000.0 + 10_000.0 * i) for i in range(6)]
+    rep = serve_loop(eng, reqs, coalesce=False, degrade=policy,
+                     faults=FaultInjector(latency_spikes={0: 1000.0}))
+    levels = {r.request_id: r.degrade_level for r in rep.results}
+    assert levels[0] == 0                 # first request: no delay yet
+    assert max(levels.values()) >= 1, levels
+    assert levels[15] == 0, levels        # spaced arrivals recovered
+    assert policy.transitions, "no transitions recorded"
+    st = eng.stats()
+    assert sum(n for _, n in st.degrade_occupancy) == len(reqs)
+    assert any(lvl > 0 for lvl, _ in st.degrade_occupancy)
+    # every result still served (degradation, not shedding)
+    assert rep.n_served == sum(r.n_queries for r in reqs)

@@ -1,0 +1,194 @@
+"""Overload-safe serving (DESIGN.md §17): deadline admission control,
+bounded-queue shedding, the per-request error boundary, and the
+fault-injection harness itself — including the clock-skew invariance that
+proves admission decisions use only relative times."""
+import numpy as np
+import pytest
+
+from repro.configs import kbest as kcfg
+from repro.core.index import KBest
+from repro.serve import (EngineFault, FaultInjector, LatencyModel, Request,
+                         STATUS_FAILED, STATUS_OK, STATUS_REJECTED,
+                         STATUS_SHED, SearchEngine, serve_loop)
+
+
+@pytest.fixture()
+def engine():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((240, 32)).astype(np.float32)
+    index = KBest(kcfg.smoke_config()).add(x)
+    return SearchEngine(index, min_bucket=8, max_bucket=32)
+
+
+def _reqs(engine, n, **kw):
+    d = engine.index.db.shape[1]
+    rng = np.random.default_rng(11)
+    return [Request(queries=rng.standard_normal((4, d)).astype(np.float32),
+                    request_id=i, **kw) for i in range(n)]
+
+
+# ------------------------------------------------------------- admission
+def test_deadline_admission_rejects_queue_busted_deadlines(engine):
+    """A 1s virtual spike on request 0 makes every same-instant follower's
+    50ms deadline infeasible from queue delay alone — they must be
+    rejected up front, with full-shape empty results."""
+    reqs = _reqs(engine, 5, arrival_ms=0.0, deadline_ms=50.0)
+    rep = serve_loop(engine, reqs, coalesce=False,
+                     faults=FaultInjector(latency_spikes={0: 1000.0}))
+    by_id = {r.request_id: r for r in rep.results}
+    assert by_id[0].status == STATUS_OK
+    for i in range(1, 5):
+        r = by_id[i]
+        assert r.status == STATUS_REJECTED, (i, r.status)
+        assert r.n_served == 0 and r.recall is None
+        assert r.dists.shape == (4, 5) and np.all(np.isinf(r.dists))
+        assert np.all(r.ids == -1)
+    assert rep.n_rejected == 4 and rep.n_served == 4
+    assert engine.stats().n_rejected == 4
+    # rejections cost no service time: the served request bounds makespan
+    assert rep.t_end_ms == pytest.approx(by_id[0].sojourn_ms, abs=1e-6)
+
+
+def test_no_deadlines_means_no_admission_machinery(engine):
+    rep = serve_loop(engine, _reqs(engine, 4))
+    assert all(r.status == STATUS_OK for r in rep.results)
+    assert rep.n_rejected == rep.n_shed == rep.n_failed == 0
+
+
+def test_admission_false_serves_late_and_records_misses(engine):
+    """admission=False is the no-policy baseline: everything is served,
+    busted deadlines show up as deadline_missed, not rejections."""
+    reqs = _reqs(engine, 4, arrival_ms=0.0, deadline_ms=50.0)
+    rep = serve_loop(engine, reqs, coalesce=False, admission=False,
+                     faults=FaultInjector(latency_spikes={0: 1000.0}))
+    assert rep.n_rejected == 0
+    assert all(r.status == STATUS_OK for r in rep.results)
+    assert rep.n_deadline_missed >= 3
+    assert engine.stats().deadline_miss_rate >= 0.75
+
+
+def test_clock_skew_invariance(engine):
+    """A constant arrival-clock offset must not change a single admission,
+    shed, or degrade outcome — decisions are relative-time only."""
+    def run(skew):
+        reqs = _reqs(engine, 6, arrival_ms=0.0, deadline_ms=40.0)
+        for i, r in enumerate(reqs):
+            r.arrival_ms = 5.0 * i
+        rep = serve_loop(engine, reqs, coalesce=False, max_queue=2,
+                         faults=FaultInjector(latency_spikes={0: 300.0},
+                                              skew_ms=skew))
+        return [(r.request_id, r.status) for r in
+                sorted(rep.results, key=lambda r: r.request_id)]
+    engine.reset_stats()
+    base = run(0.0)
+    engine.reset_stats()
+    assert run(1e7) == base
+    assert any(s != STATUS_OK for _, s in base), \
+        "workload too easy to exercise the policies"
+
+
+# ---------------------------------------------------------- bounded queue
+def test_bounded_queue_sheds_when_full(engine):
+    reqs = _reqs(engine, 6, arrival_ms=0.0)
+    rep = serve_loop(engine, reqs, coalesce=False, max_queue=2,
+                     faults=FaultInjector(latency_spikes={0: 1000.0}))
+    statuses = [r.status for r in
+                sorted(rep.results, key=lambda r: r.request_id)]
+    # r0 dispatches immediately, r1 queues (depth 1 at its arrival);
+    # r2.. find >= 2 unfinished requests ahead and are shed
+    assert statuses[:2] == [STATUS_OK, STATUS_OK]
+    assert statuses[2:] == [STATUS_SHED] * 4
+    assert rep.n_shed == 4 and engine.stats().n_shed == 4
+
+
+# ---------------------------------------------------------- error boundary
+def test_poisoned_request_fails_alone_in_coalesced_group(engine):
+    """Three coalescable requests, the middle one poisoned: the group must
+    be retried singly so only the poisoned request fails."""
+    reqs = _reqs(engine, 3)
+    rep = serve_loop(engine, reqs,
+                     faults=FaultInjector(poisoned={1}))
+    by_id = {r.request_id: r for r in rep.results}
+    assert by_id[0].status == STATUS_OK
+    assert by_id[2].status == STATUS_OK
+    assert by_id[1].status == STATUS_FAILED
+    assert "EngineFault" in by_id[1].error
+    assert rep.n_failed == 1 and engine.stats().n_failed == 1
+    assert rep.n_served == 8
+    # the healthy members' answers match a direct engine search
+    d, i = engine.search(np.asarray(reqs[0].queries))
+    np.testing.assert_array_equal(np.asarray(by_id[0].ids), np.asarray(i))
+
+
+def test_engine_exception_fails_result_not_loop(engine, monkeypatch):
+    """A genuine engine-side exception (not injector-made) must also be
+    boxed into the request's own result."""
+    reqs = _reqs(engine, 3)
+    real = SearchEngine.search
+    calls = {"n": 0}
+
+    def flaky(self, queries, k=None, search_cfg=None, gt_ids=None):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("synthetic engine crash")
+        return real(self, queries, k=k, search_cfg=search_cfg, gt_ids=gt_ids)
+
+    monkeypatch.setattr(SearchEngine, "search", flaky)
+    rep = serve_loop(engine, reqs, coalesce=False)
+    statuses = [r.status for r in
+                sorted(rep.results, key=lambda r: r.request_id)]
+    assert statuses == [STATUS_OK, STATUS_FAILED, STATUS_OK]
+    assert "synthetic engine crash" in rep.results[1].error
+
+
+def test_fault_injector_check_raises_only_for_poisoned():
+    fi = FaultInjector(poisoned={7})
+    ok = Request(queries=np.zeros((1, 4), np.float32), request_id=3)
+    bad = Request(queries=np.zeros((1, 4), np.float32), request_id=7)
+    fi.check([ok])
+    with pytest.raises(EngineFault):
+        fi.check([ok, bad])
+    assert fi.extra_ms([ok, bad]) == 0.0
+
+
+# ----------------------------------------------------------- latency model
+def test_latency_model_calibrates_to_measurements(engine):
+    m = LatencyModel(alpha=1.0)
+    scfg = engine.index.config.search
+    assert not m.calibrated
+    m.observe(engine, scfg, 8, measured_ms=12.0)
+    assert m.calibrated
+    assert m.predict_ms(engine, scfg, 8) == pytest.approx(12.0, rel=1e-6)
+    # unseen (config, bucket) keys borrow the global ratio: the prediction
+    # scales with the cost prior instead of collapsing to the raw roofline
+    wide = m.predict_ms(engine, scfg, 32)
+    assert wide > 0.0 and wide != pytest.approx(12.0)
+
+
+def test_latency_model_ewma_smooths(engine):
+    m = LatencyModel(alpha=0.5)
+    scfg = engine.index.config.search
+    m.observe(engine, scfg, 8, measured_ms=10.0)
+    m.observe(engine, scfg, 8, measured_ms=20.0)
+    got = m.predict_ms(engine, scfg, 8)
+    assert 10.0 < got < 20.0
+
+
+# ------------------------------------------------------------- accounting
+def test_report_counts_partition_requests(engine):
+    reqs = _reqs(engine, 8, arrival_ms=0.0, deadline_ms=60.0)
+    rep = serve_loop(engine, reqs, coalesce=False, max_queue=3,
+                     faults=FaultInjector(latency_spikes={0: 500.0},
+                                          poisoned={1}))
+    n_ok = sum(r.status == STATUS_OK for r in rep.results)
+    assert rep.n_requests == len(reqs)
+    assert n_ok + rep.n_rejected + rep.n_shed + rep.n_failed == len(reqs)
+    assert rep.n_served == 4 * n_ok
+    # percentile guard: a drain where nothing is served must not raise
+    engine.reset_stats()
+    all_rejected = serve_loop(
+        engine, _reqs(engine, 3, arrival_ms=0.0, deadline_ms=1e-6),
+        coalesce=False)
+    assert all_rejected.n_served == 0
+    assert all_rejected.lat_p99_ms == 0.0
+    assert all_rejected.sojourn_p99_ms == 0.0
